@@ -1,0 +1,59 @@
+"""Benchmark driver: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig10_11] [--fast]
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from benchmarks import extensions as E
+from benchmarks import paper_tables as T
+
+SUITES = {
+    "table1": lambda fast: T.table1_correlation(60 if fast else 150),
+    "table2": lambda fast: T.table2_predictor(*((60, 30) if fast else (200, 60))),
+    "fig6": lambda fast: T.fig6_case_study(),
+    "fig10_11": lambda fast: T.fig10_11_overall(
+        rates=(8.0,) if fast else (4.0, 8.0, 16.0),
+        duration=45.0 if fast else 90.0),
+    "fig12_13": lambda fast: T.fig12_13_ablation(
+        duration=45.0 if fast else 90.0),
+    "fig14": lambda fast: T.fig14_continuous_learning(2 if fast else 4),
+    "overhead": lambda fast: T.overhead(),
+    "kernels": lambda fast: T.kernels(),
+    # beyond-paper extension studies
+    "sens_phi": lambda fast: E.sens_phi(
+        duration=30.0 if fast else 60.0),
+    "sens_predictor": lambda fast: E.sens_predictor(
+        duration=30.0 if fast else 60.0),
+    "multiarch": lambda fast: E.multiarch(
+        duration=20.0 if fast else 40.0),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help=f"comma-separated subset of {sorted(SUITES)}")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SUITES))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            for row in SUITES[name](args.fast):
+                print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            sys.stdout.flush()
+        except Exception as e:  # keep the suite running
+            failures += 1
+            print(f"{name},nan,ERROR {type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end serving driver (the paper's experiment, Figs 10-13): seven
+LLM instances, Poisson arrivals, all six strategies, with the roofline cost
+model pricing batch serving on the paper's V100 testbed.
+
+    PYTHONPATH=src python examples/serve_cluster.py [--rate 8] [--duration 90]
+"""
+import argparse
+
+from repro.configs import get_config
+from repro.core.predictor import GenerationLengthPredictor
+from repro.serving.cost_model import V100_32G
+from repro.sim.runner import run_strategy
+from repro.workload.apps import make_dataset
+from repro.workload.generator import poisson_workload
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rate", type=float, default=8.0)
+ap.add_argument("--duration", type=float, default=90.0)
+args = ap.parse_args()
+
+cfg = get_config("chatglm-6b")      # the paper's model
+wl = poisson_workload(args.rate, args.duration, seed=0)
+predictor = GenerationLengthPredictor(seed=5).fit(make_dataset(120, seed=6))
+print(f"{len(wl)} requests @ {args.rate}/s over {args.duration}s, "
+      f"7x V100-32G instances\n")
+print(f"{'strategy':8s} {'req/s':>7s} {'tok/s':>8s} {'valid/s':>8s} "
+      f"{'avg RT':>8s} {'p95 RT':>8s} {'OOM':>4s}")
+for strat in ("vs", "vsq", "ccb", "glp", "abp", "magnus"):
+    m = run_strategy(strat, wl, cfg, hw=V100_32G, kv_dtype_bytes=4,
+                     predictor=predictor)
+    print(f"{strat:8s} {m.request_throughput:7.3f} "
+          f"{m.token_throughput:8.1f} {m.valid_token_throughput:8.1f} "
+          f"{m.avg_response_time:8.1f} {m.p95_response_time:8.1f} "
+          f"{m.oom_events:4d}")
+print("\npaper claims (Fig 11): Magnus +66..234% request throughput vs "
+      "baselines, -60..90% response time")

@@ -1,0 +1,31 @@
+"""Train a reduced language model on the synthetic LMaaS corpus for a few
+hundred steps (loss curve + checkpoint), exercising the same train_step the
+multi-pod dry-run lowers at production scale.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch smollm-135m]
+        [--steps 200]
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.train.data import DataConfig
+from repro.train.trainer import TrainConfig, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="smollm-135m")
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--d-model", type=int, default=256)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced(d_model=args.d_model)
+print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+out = train(cfg,
+            TrainConfig(steps=args.steps, log_every=max(args.steps // 10, 1),
+                        ckpt_path="runs/train_lm_ck.npz"),
+            DataConfig(batch_size=8, seq_len=128),
+            act_dtype=jnp.float32)
+h = out["history"]
+print(f"\nloss: {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} "
+      f"({h[-1]['wall']:.0f}s); checkpoint at runs/train_lm_ck.npz")

@@ -1,0 +1,9 @@
+"""deepseek-7b — llama-architecture dense (MHA: kv==heads) [arXiv:2401.02954]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-7b", family="dense", num_layers=30, d_model=4096,
+    num_heads=32, num_kv_heads=32, head_dim=128, d_ff=11008,
+    vocab_size=102400,
+    source="arXiv:2401.02954",
+)

@@ -1,0 +1,67 @@
+"""WMA-directed adaptive batcher — paper Algorithm 1 + OOM-split recovery.
+
+On request arrival: scan the waiting queue, compute WMA(B ∪ {p}) with the
+*predicted* generation length, track the minimum-WMA batch whose estimated
+memory MEM(B ∪ {p}) fits Θ; insert there if the minimum is below the
+threshold Φ, else open a new batch.  On an OOM report: split the batch
+evenly in two, mark both uninsertable, requeue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.core.types import Batch, Request
+from repro.core.wma import MemoryModel, batch_wma_of
+
+
+@dataclasses.dataclass
+class BatcherConfig:
+    wma_threshold: float = 50_000.0   # Φ (paper §IV-B)
+    max_batch_size: Optional[int] = None  # GLP ablation: cap β (e.g. 7)
+
+
+class AdaptiveBatcher:
+    def __init__(self, memory: MemoryModel,
+                 config: Optional[BatcherConfig] = None):
+        self.memory = memory
+        self.cfg = config or BatcherConfig()
+        self.queue: List[Batch] = []
+
+    def insert(self, req: Request, now: float) -> Batch:
+        """Algorithm 1. Returns the batch the request landed in."""
+        phi = float("inf")
+        target: Optional[Batch] = None
+        for b in self.queue:
+            if not b.insertable:
+                continue
+            if (self.cfg.max_batch_size is not None
+                    and b.size >= self.cfg.max_batch_size):
+                continue
+            if self.memory.mem_of(b, extra=req) > self.memory.theta:
+                continue                       # would OOM: skip B
+            w = batch_wma_of(b, extra=req)
+            if w < phi:
+                phi, target = w, b
+        if target is not None and phi < self.cfg.wma_threshold:
+            target.requests.append(req)
+            return target
+        nb = Batch(requests=[req], created_time=now)
+        self.queue.append(nb)
+        return nb
+
+    def pop(self, batch: Batch) -> None:
+        self.queue.remove(batch)
+
+    def handle_oom(self, batch: Batch, now: float) -> Tuple[Batch, Batch]:
+        """Even split, both halves uninsertable, back to the queue."""
+        half = max(1, batch.size // 2)
+        b1 = Batch(requests=batch.requests[:half], created_time=now,
+                   insertable=False)
+        b2 = Batch(requests=batch.requests[half:], created_time=now,
+                   insertable=False)
+        self.queue.extend([b for b in (b1, b2) if b.requests])
+        return b1, b2
+
+    def __len__(self) -> int:
+        return len(self.queue)

@@ -1,0 +1,102 @@
+"""The Magnus service: glue for predictor -> batcher -> estimator -> HRRN
+(paper Fig. 7), shared by the discrete-event simulator and the real JAX
+engine driver.  Ablation strategies come from the same class:
+
+  VS / VSQ : no prediction, FCFS request batches of fixed beta
+  GLP      : + predictor & WMA batching, fixed beta cap
+  ABP      : + adaptive batch size (no cap)
+  MAGNUS   : + serving-time estimation & HRRN scheduling
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.batcher import AdaptiveBatcher, BatcherConfig
+from repro.core.estimator import EstimatorConfig, ServingTimeEstimator
+from repro.core.predictor import GenerationLengthPredictor, PredictorConfig
+from repro.core.scheduler import FCFSScheduler, HRRNScheduler
+from repro.core.types import Batch, Request
+from repro.core.wma import MemoryModel
+
+
+@dataclasses.dataclass
+class MagnusConfig:
+    strategy: str = "magnus"            # vs | vsq | ccb | glp | abp | magnus
+    wma_threshold: float = 50_000.0     # Φ
+    fixed_batch_size: Optional[int] = None  # None => Eq. (1) for vs/vsq/glp
+    continuous_learning: bool = True
+
+
+class MagnusService:
+    def __init__(self, memory: MemoryModel, cfg: Optional[MagnusConfig] = None,
+                 predictor: Optional[GenerationLengthPredictor] = None,
+                 estimator: Optional[ServingTimeEstimator] = None,
+                 seed: int = 0):
+        self.cfg = cfg or MagnusConfig()
+        self.memory = memory
+        s = self.cfg.strategy
+        self.uses_prediction = s in ("glp", "abp", "magnus")
+        self.uses_hrrn = s == "magnus"
+        beta_cap = None
+        if s in ("vs", "vsq", "ccb", "glp"):
+            beta_cap = (self.cfg.fixed_batch_size
+                        or memory.vanilla_batch_size())
+        self.beta_cap = beta_cap
+        self.predictor = predictor or GenerationLengthPredictor(seed=seed)
+        self.estimator = estimator or ServingTimeEstimator()
+        self.batcher = AdaptiveBatcher(
+            memory, BatcherConfig(wma_threshold=self.cfg.wma_threshold,
+                                  max_batch_size=beta_cap))
+        self.scheduler = (HRRNScheduler(self._safe_estimate)
+                          if self.uses_hrrn else FCFSScheduler())
+
+    def _safe_estimate(self, batch: Batch) -> float:
+        try:
+            return self.estimator.estimate(batch)
+        except RuntimeError:     # estimator not yet fit (cold start)
+            return 1.0
+
+    # -- ingress -------------------------------------------------------------
+    def on_request(self, req: Request, now: float) -> Batch:
+        if self.uses_prediction:
+            req.predicted_gen_length = self.predictor.predict(req)
+            return self.batcher.insert(req, now)
+        # vanilla: FCFS fill of the newest batch up to the fixed beta
+        req.predicted_gen_length = self.memory.max_gen
+        q = self.batcher.queue
+        if q and q[-1].insertable and q[-1].size < (self.beta_cap or 1):
+            q[-1].requests.append(req)
+            return q[-1]
+        nb = Batch(requests=[req], created_time=now)
+        q.append(nb)
+        return nb
+
+    # -- dispatch ------------------------------------------------------------
+    def next_batch(self, now: float) -> Optional[Batch]:
+        b = self.scheduler.select(self.batcher.queue, now)
+        if b is not None:
+            self.batcher.pop(b)
+        return b
+
+    def estimate_time(self, batch: Batch) -> float:
+        try:
+            return self.estimator.estimate(batch)
+        except RuntimeError:
+            return 1.0
+
+    # -- feedback ------------------------------------------------------------
+    def on_batch_done(self, batch: Batch, predicted_time: float,
+                      actual_time: float, now: float) -> None:
+        if not self.cfg.continuous_learning:
+            return
+        if self.uses_prediction:
+            for r in batch.requests:
+                self.predictor.observe(r, now)
+        if self.uses_hrrn:
+            self.estimator.observe(batch.size, batch.length,
+                                   batch.gen_length, predicted_time,
+                                   actual_time, now)
+
+    def on_oom(self, batch: Batch, now: float):
+        return self.batcher.handle_oom(batch, now)

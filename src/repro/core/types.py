@@ -1,0 +1,63 @@
+"""Shared request/batch datatypes for the serving stack."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    app: str                      # application id (e.g. "mt")
+    task: str                     # task id (e.g. "mt:en-de")
+    instruction: str              # instruction text prefix
+    user_input: str               # raw user input text
+    arrival_time: float = 0.0
+    # token-level quantities
+    length: int = 0               # request length L(p): instruction + input
+    user_input_length: int = 0    # UIL
+    gen_length: int = 0           # ground-truth G(p) (scripted replay)
+    predicted_gen_length: Optional[int] = None
+    # lifecycle
+    finish_time: Optional[float] = None
+    req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    @property
+    def response_time(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+
+@dataclasses.dataclass
+class Batch:
+    requests: List[Request] = dataclasses.field(default_factory=list)
+    created_time: float = 0.0
+    insertable: bool = True       # OOM-split batches become uninsertable
+    batch_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    @property
+    def length(self) -> int:
+        """L(B) = max request length (padding target)."""
+        return max((r.length for r in self.requests), default=0)
+
+    @property
+    def gen_length(self) -> int:
+        """G(B) from ground truth (engine/metrics use)."""
+        return max((r.gen_length for r in self.requests), default=0)
+
+    @property
+    def predicted_gen_length(self) -> int:
+        """G'(B) = max predicted generation length."""
+        return max((r.predicted_gen_length or 0 for r in self.requests),
+                   default=0)
+
+    def queuing_time(self, now: float) -> float:
+        """T_q(B): longest queuing time among requests (paper §III-E)."""
+        return max((now - r.arrival_time for r in self.requests), default=0.0)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the serving hot loops.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling), <name>/ops.py (jit'd wrapper; interpret=True off-TPU) and
+<name>/ref.py (pure-jnp oracle used by the allclose test sweeps).
+"""
+from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.ssd_scan.ops import ssd_scan  # noqa: F401

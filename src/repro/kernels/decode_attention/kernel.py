@@ -1,0 +1,207 @@
+"""Pallas TPU decode attention (flash-decode): one query token per request
+against a long KV cache, tiled over KV blocks with online-softmax partial
+merges in VMEM scratch.
+
+Grid: (B, Hkv, num_k_blocks) — K innermost so the f32 accumulators persist.
+All G grouped query heads of one KV head are processed together as a
+[G, D] x [D, block_k] MXU matmul.  Per-request ``lengths`` mask invalid
+(padded / not-yet-written) cache slots; KV blocks entirely beyond a
+request's length are skipped with ``pl.when`` — on real hardware those HBM
+reads are exactly the WMA the Magnus batcher minimizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            block_k: int, scale: float):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [G, D]
+        k = k_ref[0].astype(jnp.float32)                    # [bk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, bk]
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev, l_prev = m_ref[:, 0], l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_prev * alpha + p.sum(axis=1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def _kernel_i8(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+               acc_ref, m_ref, l_ref, *, block_k: int, scale: float):
+    """int8-cache variant: K/V arrive as int8 + per-(token,head) scales;
+    dequantization happens in VMEM right before the MXU pass, so HBM
+    traffic is halved vs bf16 (the kernel-level form of the §Perf
+    cache_int8 lever)."""
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [G, D]
+        k = k_ref[0].astype(jnp.float32) * ks_ref[0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev, l_prev = m_ref[:, 0], l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_prev * alpha + p.sum(axis=1)
+        m_ref[:, 0] = m_new
+        v = v_ref[0].astype(jnp.float32) * vs_ref[0][:, None]
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention_int8_kernel(q: jax.Array, k_cache: jax.Array,
+                                 v_cache: jax.Array, k_scale: jax.Array,
+                                 v_scale: jax.Array, lengths: jax.Array, *,
+                                 block_k: int = 512,
+                                 interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, D]; caches: int8 [B, S, Hkv, D]; scales: [B, S, Hkv];
+    lengths: [B] -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    block_k = min(block_k, max(s, 8))
+    pad_k = (-s) % block_k
+    if pad_k:
+        pad4 = ((0, 0), (0, pad_k), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, pad4)
+        v_cache = jnp.pad(v_cache, pad4)
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k), (0, 0)))
+    s_p = s + pad_k
+
+    qt = q.reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    kt = k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s_p, d)
+    vt = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s_p, d)
+    kst = k_scale.transpose(0, 2, 1).reshape(b * hkv, s_p)
+    vst = v_scale.transpose(0, 2, 1).reshape(b * hkv, s_p)
+
+    grid = (b, hkv, s_p // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel_i8, block_k=block_k, scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, d), lambda bi, hi, ki: (bi * hkv + hi, 0, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bi, hi, ki: (bi * hkv + hi, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bi, hi, ki: (bi * hkv + hi, ki, 0)),
+            pl.BlockSpec((1, block_k),
+                         lambda bi, hi, ki: (bi * hkv + hi, ki)),
+            pl.BlockSpec((1, block_k),
+                         lambda bi, hi, ki: (bi * hkv + hi, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d),
+                               lambda bi, hi, ki: (bi * hkv + hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qt, kt, vt,
+      kst.astype(jnp.float32), vst.astype(jnp.float32))
+    return out.reshape(b, hkv, g, d).reshape(b, hq, d)
+
+
+def decode_attention_kernel(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, lengths: jax.Array, *,
+                            block_k: int = 512,
+                            interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, D]; caches: [B, S, Hkv, D]; lengths: [B] -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    block_k = min(block_k, max(s, 8))
+    pad_k = (-s) % block_k
+    if pad_k:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    s_p = s + pad_k
+
+    qt = q.reshape(b, hkv, g, d).transpose(0, 1, 2, 3).reshape(b * hkv, g, d)
+    kt = k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s_p, d)
+    vt = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, s_p, d)
+
+    grid = (b, hkv, s_p // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ki: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, g, d), lambda bi, hi, ki: (bi * hkv + hi, 0, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bi, hi, ki: (bi * hkv + hi, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bi, hi, ki: (bi * hkv + hi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, d),
+                               lambda bi, hi, ki: (bi * hkv + hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qt, kt, vt)
+    return out.reshape(b, hkv, g, d).reshape(b, hq, d)

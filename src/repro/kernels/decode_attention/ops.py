@@ -1,0 +1,30 @@
+"""jit'd public wrapper: TPU pallas kernel, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_int8_kernel, decode_attention_kernel)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "use_ref"))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
+                     use_ref: bool = False):
+    if use_ref:
+        return decode_attention_ref(q, k_cache, v_cache, lengths)
+    interpret = jax.devices()[0].platform != "tpu"
+    return decode_attention_kernel(q, k_cache, v_cache, lengths,
+                                   block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention_int8(q, k_cache, v_cache, k_scale, v_scale, lengths, *,
+                          block_k: int = 512):
+    """int8-KV-cache decode attention (in-VMEM dequant; §Perf cache_int8)."""
+    interpret = jax.devices()[0].platform != "tpu"
+    return decode_attention_int8_kernel(q, k_cache, v_cache, k_scale,
+                                        v_scale, lengths, block_k=block_k,
+                                        interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for single-token decode attention with valid-length
+masking (the paper's wasted-memory-access quantity lives in the masked
+slots: a real engine still reads them from HBM)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, lengths: jax.Array) -> jax.Array:
+    """q: [B, Hq, D]; caches: [B, S, Hkv, D]; lengths: [B] -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, d) * d ** -0.5
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(s)[None, :] < lengths[:, None]
+    sc = jnp.where(valid[:, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)

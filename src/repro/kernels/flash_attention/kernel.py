@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention (prefill): causal / sliding-window, GQA.
+
+Grid: (batch * q_heads, num_q_blocks, num_k_blocks) — the K dimension is
+innermost, so VMEM scratch accumulators (f32 running max / sum / output)
+persist across K steps of one Q block (TPU grid iteration is sequential).
+Block shapes are MXU-aligned (block_q x head_dim, block_k x head_dim);
+fully-masked K blocks (beyond causal frontier / outside the window) are
+skipped with ``pl.when`` so the causal prefill does ~half the work.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            window: Optional[int], seq_k: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # whole-block skip: block is live iff some (q, k) pair is unmasked
+    live = True
+    if causal:
+        live = q_start + block_q - 1 >= k_start
+    if window is not None:
+        live = jnp.logical_and(live, q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)                    # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < seq_k
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= q_pos - k_pos < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[:, 0], l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_prev * alpha + p.sum(axis=1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """q: [B, Sq, Hq, D]; k,v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D].
+
+    Assumes Sq == Sk (prefill). Pads S up to a block multiple internally.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(sk, 8))
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q or pad_k:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sq_p, sk_p = sq + pad_q, sk + pad_k
+
+    # layout: fold (B, Hq) into the leading grid dim
+    qt = q.transpose(0, 2, 1, 3).reshape(b * hq, sq_p, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk_p, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk_p, d)
+
+    grid = (b * hq, sq_p // block_q, sk_p // block_k)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // hq) * hkv + (bh % hq) // g, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=d ** -0.5, block_q=block_q,
+                          block_k=block_k, causal=causal, window=window,
+                          seq_k=sk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(b, hq, sq_p, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]

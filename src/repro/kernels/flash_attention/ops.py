@@ -1,0 +1,23 @@
+"""jit'd public wrapper: TPU pallas kernel, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "use_ref"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, use_ref: bool = False):
+    if use_ref:
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    interpret = jax.devices()[0].platform != "tpu"
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

@@ -1,0 +1,118 @@
+"""Pallas TPU Mamba2 SSD chunked scan.
+
+Grid: (B, H, num_chunks) — chunks innermost so the [P, N] f32 recurrent
+state persists in VMEM scratch across chunks.  Per chunk (length C):
+
+  intra:  Y  += ((C_blk B_blk^T) o decay_ij o dt_j) X_blk      (dual form)
+  inter:  Y  += (C_blk o exp(cum)) @ state_in
+  state:  state = exp(tot) * state_in + B_blk^T (X o dt o decay_out)
+
+Chunk length and N are MXU-aligned (128); P=64 packs two heads per MXU
+pass on v5e.  The decay matrices are computed in-VMEM from a cumulative
+log-decay vector — nothing of O(S^2) ever exists.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_out_ref, state_ref,
+            *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [C, P]
+    dt = dt_ref[0, :, 0]                      # [C] (f32)
+    a = a_ref[0]                              # scalar
+    b = b_ref[0].astype(jnp.float32)          # [C, N]
+    c = c_ref[0].astype(jnp.float32)          # [C, N]
+
+    da = dt * a                               # [C] (<0)
+    cum = jnp.cumsum(da)                      # [C]
+    tot = cum[-1]
+
+    # intra-chunk dual term
+    li = cum[:, None]
+    lj = cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tril = iota_i >= iota_j
+    decay = jnp.where(tril, jnp.exp(li - lj), 0.0)        # [C, C]
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    w = cb * decay * dt[None, :]                          # [C, C]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    state = state_ref[...]                                # [P, N]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: state' = exp(tot)*state + sum_j decay_out_j dt_j x_j b_j^T
+    xw = x * (dt * jnp.exp(tot - cum))[:, None]           # [C, P]
+    new_state = jax.lax.dot_general(xw, b, (((0,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(tot) * state + new_state
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        st_out_ref[0] = state_ref[...]
+
+
+def ssd_scan_kernel(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                    c: jax.Array, *, chunk: int = 128,
+                    interpret: bool = False
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,H,P]; dt: [B,S,H]; a: [H]; b,c: [B,S,N] ->
+    (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk -= 1
+    nc = s // chunk
+
+    xt = x.transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+    dtt = dt.transpose(0, 2, 1).reshape(bsz * h, s, 1).astype(jnp.float32)
+    at = jnp.tile(a.astype(jnp.float32), bsz)             # [B*H]
+    # b, c shared across heads: index map re-reads the same block per head
+    grid = (bsz, h, nc)
+
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bi, hi, ci: (bi * grid[1] + hi, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi * grid[1] + hi, ci, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (bi * grid[1] + hi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda bi, hi, ci: (bi * grid[1] + hi, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda bi, hi, ci: (bi * grid[1] + hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, at, b, c)
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    return y, st.reshape(bsz, h, p, n)

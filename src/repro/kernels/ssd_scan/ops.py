@@ -1,0 +1,17 @@
+"""jit'd public wrapper: TPU pallas kernel, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_ref"))
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, use_ref: bool = False):
+    if use_ref:
+        return ssd_scan_ref(x, dt, a, b, c)
+    interpret = jax.devices()[0].platform != "tpu"
+    return ssd_scan_kernel(x, dt, a, b, c, chunk=chunk, interpret=interpret)

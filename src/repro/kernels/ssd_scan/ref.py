@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the Mamba2 SSD scan: the *naive sequential
+recurrence* (a genuinely different algorithm from the chunked kernel, so
+agreement is strong evidence of correctness).
+
+h_t = exp(dt_t * a) * h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, state0: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,H,P]; dt: [B,S,H] (>0); a: [H] (<0); b,c: [B,S,N].
+    Returns (y [B,S,H,P], final state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    x, dt, b, c = (t.astype(jnp.float32) for t in (x, dt, b, c))
+    a = a.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * a)               # [B,H]
+        upd = dtt[..., None, None] * xt[..., None] * bt[:, None, None, :]
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    state0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if state0 is None
+              else state0.astype(jnp.float32))
+    final, ys = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), final

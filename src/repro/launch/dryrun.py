@@ -1,0 +1,273 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, with no real allocation (ShapeDtypeStruct inputs).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+        --shape decode_32k [--multi-pod] [--out runs/dryrun.jsonl]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Prints compiled.memory_analysis() (proves the config fits HBM) and
+cost_analysis() (FLOPs/bytes for EXPERIMENTS.md §Roofline), and appends a
+JSON record per combination.
+"""  # noqa: E402
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.layers import abstract_of  # noqa: E402
+from repro.partitioning import (sharding_rules, tree_shardings,  # noqa: E402
+                                with_mesh_rules)
+from repro.train import optimizer as opt_lib  # noqa: E402
+from repro.train.trainer import make_train_step  # noqa: E402
+
+
+def _dtype_policy(cfg, kind: str):
+    """Params dtype: bf16 for serving; f32 (<10B) / bf16 (>=10B) for train.
+    Adam moments: f32 below 100B, bf16 for the 671B MoE (DESIGN.md)."""
+    if kind != "train":
+        return jnp.bfloat16, None
+    big = cfg.param_count() >= 10e9
+    huge = cfg.param_count() >= 100e9
+    return (jnp.bfloat16 if big else jnp.float32,
+            jnp.bfloat16 if huge else jnp.float32)
+
+
+def build_rules(cfg, kind: str, mesh, multi_pod: bool,
+                overrides: Optional[Dict[str, Any]] = None):
+    dims = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dm = dims.get("data", 1) * dims.get("model", 1)
+    fsdp = kind == "train" and cfg.param_count() > 8e9
+    # 2-D expert parallelism (1 expert/device) only for serving: in train it
+    # conflicts with the (groups: data, experts: model) dispatch layout and
+    # XLA gathers the routed activations; FSDP shards the expert d_model dim
+    # over data instead (see EXPERIMENTS.md §Perf).
+    expert_2d = (cfg.moe is not None and kind != "train"
+                 and cfg.moe.num_experts % dm == 0)
+    rules = sharding_rules(kind, multi_pod=multi_pod, fsdp=fsdp,
+                           expert_2d=expert_2d, overrides=overrides)
+    return with_mesh_rules(rules, mesh)
+
+
+def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 mesh=None, overrides: Optional[Dict[str, Any]] = None,
+                 variant: Optional[Dict[str, Any]] = None):
+    """Returns (jitted_fn, example_args (SDS with shardings)) or raises
+    ValueError for documented skips.  ``overrides`` adjusts sharding rules;
+    ``variant`` adjusts ModelConfig fields (perf knobs, §Perf)."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if variant:
+        cfg = _dc.replace(cfg, **variant)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = M.supports_shape(cfg, shape)
+    if not ok:
+        raise ValueError(f"SKIP {arch} x {shape_name}: {why}")
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    kind = shape.kind
+    rules = build_rules(cfg, kind, mesh, multi_pod, overrides)
+    p_dtype, m_dtype = _dtype_policy(cfg, kind)
+
+    spec = M.model_spec(cfg, p_dtype)
+    params_sds = abstract_of(spec)
+    params_axes = M.param_axes(cfg, p_dtype)
+    params_sh = tree_shardings(params_axes, params_sds, rules, mesh)
+    params_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_sds, params_sh)
+
+    io = M.input_specs(cfg, shape)
+    batch_sds, batch_axes = io["specs"], io["axes"]
+    batch_sh = tree_shardings(batch_axes, batch_sds, rules, mesh)
+    batch_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        batch_sds, batch_sh)
+
+    if kind == "train":
+        opt_cfg = opt_lib.AdamWConfig(
+            moment_dtype=m_dtype if m_dtype is not None else jnp.float32)
+        step_fn = make_train_step(cfg, opt_cfg, rules=rules,
+                                  act_dtype=jnp.bfloat16)
+        mom = jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+            s.shape, opt_cfg.moment_dtype), params_sds)
+        mom_sh = tree_shardings(params_axes, mom, rules, mesh)
+        mom = jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=sh), mom, mom_sh)
+        opt_sds = opt_lib.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P())),
+            mu=mom, nu=mom)
+        fn = jax.jit(step_fn, donate_argnums=(0, 1))
+        return fn, (params_sds, opt_sds, batch_sds)
+
+    if kind == "prefill":
+        cache_len = (min(cfg.sliding_window, shape.seq_len)
+                     if cfg.sliding_window else None)
+
+        def prefill_fn(params, batch):
+            return M.prefill(params, cfg, batch, rules=rules,
+                             act_dtype=jnp.bfloat16, cache_len=cache_len)
+
+        fn = jax.jit(prefill_fn)
+        return fn, (params_sds, batch_sds)
+
+    # decode
+    cache_len = M.decode_cache_len(cfg, shape)
+    cache_seq = cache_len if cfg.family != "ssm" else 8
+    cache_sds, cache_axes = M.cache_struct(cfg, shape.global_batch, cache_seq,
+                                           dtype=jnp.bfloat16)
+    cache_sh = tree_shardings(cache_axes, cache_sds, rules, mesh)
+    cache_sds = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_sds, cache_sh)
+
+    def decode_fn(params, cache, batch):
+        return M.decode_step(params, cfg, cache, batch, rules=rules,
+                             act_dtype=jnp.bfloat16)
+
+    fn = jax.jit(decode_fn, donate_argnums=(1,))
+    return fn, (params_sds, cache_sds, batch_sds)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True,
+               overrides: Optional[Dict[str, Any]] = None,
+               variant: Optional[Dict[str, Any]] = None) -> dict:
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "status": "ok"}
+    if overrides:
+        rec["overrides"] = {k: str(v) for k, v in overrides.items()}
+    if variant:
+        rec["variant"] = {k: str(v) for k, v in variant.items()}
+    t0 = time.time()
+    try:
+        fn, args = build_dryrun(arch, shape_name, multi_pod=multi_pod,
+                                overrides=overrides, variant=variant)
+        # artifact-free static memory: exact per-device bytes of the sharded
+        # inputs (params / opt state / cache). XLA's temp numbers on the CPU
+        # backend include f32 upcast+transpose copies of bf16 weights that a
+        # TPU (native bf16 MXU) never materializes — see DESIGN.md §7.
+        static = 0
+        for leaf in jax.tree.leaves(args):
+            shard = leaf.sharding.shard_shape(leaf.shape)
+            n = 1
+            for d in shard:
+                n *= d
+            static += n * leaf.dtype.itemsize
+        rec["static_mem_gib"] = round(static / 2 ** 30, 3)
+        # analytic HBM-traffic floor (params/cache/optimizer/checkpoint
+        # streams only). The parsed HLO bytes are an *upper* bound — they
+        # assume every intermediate round-trips HBM, while TPU fusions keep
+        # hot values in VMEM. True t_memory lies between the two.
+        cfg0 = get_config(arch)
+        shape0 = INPUT_SHAPES[shape_name]
+        n_dev = 512 if multi_pod else 256
+        p_bytes = static  # params+opt+cache shards per device
+        if shape0.kind == "train":
+            tok_dev = shape0.global_batch * shape0.seq_len / n_dev
+            acts = cfg0.num_layers * tok_dev * cfg0.d_model * 2 * 3
+            lb = 2.5 * p_bytes + acts
+        else:
+            lb = p_bytes
+        rec["t_memory_lb_s"] = round(lb / rl.HBM_BW, 6)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        if verbose:
+            print(f"--- {arch} x {shape_name} mesh={rec['mesh']}")
+            print("memory_analysis:", mem)
+        cost = compiled.cost_analysis()
+        if verbose:
+            keys = ("flops", "bytes accessed")
+            cd = cost[0] if isinstance(cost, list) else cost
+            print("cost_analysis:", {k: cd.get(k) for k in keys})
+        roof = rl.analyze(compiled)
+        rec.update(roof.as_dict())
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        cfg = get_config(arch)
+        n_active = cfg.active_param_count()
+        shape = INPUT_SHAPES[shape_name]
+        tokens = (shape.global_batch * shape.seq_len
+                  if shape.kind in ("train", "prefill")
+                  else shape.global_batch)
+        mult = 6 if shape.kind == "train" else 2
+        rec["model_flops_global"] = float(mult * n_active * tokens)
+        n_dev = 512 if multi_pod else 256
+        per_dev_model = rec["model_flops_global"] / n_dev
+        rec["useful_flops_frac"] = (per_dev_model / rec["flops_per_device"]
+                                    if rec["flops_per_device"] else None)
+        if verbose:
+            print(json.dumps({k: rec[k] for k in
+                              ("t_compute_s", "t_memory_s", "t_collective_s",
+                               "dominant", "peak_mem_gib",
+                               "useful_flops_frac")}, default=str))
+    except ValueError as e:
+        if str(e).startswith("SKIP"):
+            rec["status"] = "skipped"
+            rec["reason"] = str(e)
+            if verbose:
+                print(str(e))
+        else:
+            rec["status"] = "error"
+            rec["error"] = traceback.format_exc()[-2000:]
+            if verbose:
+                print(rec["error"])
+    except Exception:
+        rec["status"] = "error"
+        rec["error"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(rec["error"])
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = dryrun_one(arch, shape, multi_pod=mp)
+                if rec["status"] == "error":
+                    n_fail += 1
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec, default=str) + "\n")
+    if n_fail:
+        raise SystemExit(f"{n_fail} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""§Perf hillclimbing driver: run named variants of the three selected
+(arch x shape) pairs and append records (baseline + each iteration) to
+runs/hillclimb.jsonl.  Each variant carries its hypothesis so the
+EXPERIMENTS.md §Perf log can be generated from the artifact alone.
+
+    PYTHONPATH=src python -m repro.launch.hillclimb [--pair qwen_decode]
+"""  # noqa: E402
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+from typing import Any, Dict, List, Optional, Tuple  # noqa: E402
+
+from repro.launch.dryrun import dryrun_one  # noqa: E402
+
+# (name, arch, shape, hypothesis, overrides, variant)
+Variant = Tuple[str, str, str, str, Optional[Dict[str, Any]],
+                Optional[Dict[str, Any]]]
+
+PAIRS: Dict[str, List[Variant]] = {
+    # 1. worst useful-FLOPs fraction among train shapes: smollm's 9 heads
+    #    cannot shard on the 16-way model axis -> attention replicated.
+    "smollm_train": [
+        ("baseline", "smollm-135m", "train_4k",
+         "paper-faithful rules: heads unshardable (9 % 16) -> attention "
+         "replicated across the model axis", None, None),
+        ("batch2d", "smollm-135m", "train_4k",
+         "a 135M model needs no tensor parallelism: map the model axis as "
+         "extra data parallelism (batch 256 = 16 x 16); predicts ~16x less "
+         "replicated attention compute/traffic",
+         {"act_batch": ("data", "model"), "act_seq": None,
+          "q_heads": None, "kv_heads": None, "mlp": None, "vocab": None,
+          "act_heads": None, "act_mlp": None, "act_vocab": None,
+          "expert_groups": ("data", "model")}, None),
+        ("batch2d_noremat", "smollm-135m", "train_4k",
+         "on top of batch2d: a 135M model does not need rematerialization "
+         "(activations ~0.14 GiB/device) -> drop recompute: predicts "
+         "~25% lower compute term and less re-read traffic",
+         {"act_batch": ("data", "model"), "act_seq": None,
+          "q_heads": None, "kv_heads": None, "mlp": None, "vocab": None,
+          "act_heads": None, "act_mlp": None, "act_vocab": None,
+          "expert_groups": ("data", "model")}, {"remat_mode": "none"}),
+    ],
+    # 2. most collective-bound (30% of roofline sum): MHA K/V all-gathers
+    #    against sequence-sharded activations.
+    "deepseek7b_train": [
+        ("baseline", "deepseek-7b", "train_4k",
+         "sequence-parallel activations force per-layer K/V all-gathers "
+         "for MHA attention (kv=32 heads)", None, None),
+        ("heads_attention", "deepseek-7b", "train_4k",
+         "Megatron-style: gather x once per layer and run attention "
+         "head-sharded (act_seq=None on attention inputs) -> one AG(x) + "
+         "reduce at wo instead of AG(k)+AG(v)+score psums",
+         {"act_seq": None}, None),
+        ("hybrid_sp", "deepseek-7b", "train_4k",
+         "keep seq-parallel block I/O (memory) but drop the q constraint "
+         "to let XLA pick attention layout per-op",
+         {"act_heads": None}, None),
+        ("no_remat", "deepseek-7b", "train_4k",
+         "keep seq-parallel; drop layer rematerialization: the backward "
+         "recompute repeats every K/V all-gather, so saving residuals "
+         "(~3.7 GiB/device) should cut AG traffic ~1/3 and compute ~25%",
+         None, {"remat_mode": "none"}),
+        ("no_remat_heads_attn", "deepseek-7b", "train_4k",
+         "compose: no remat + head-sharded attention; predicts collectives "
+         "below 1s but the heads_attention memory regression (+40%) may "
+         "dominate — measuring the trade",
+         {"act_seq": None}, {"remat_mode": "none"}),
+    ],
+    # 3. most representative of the paper's technique (32k-cache batched
+    #    decode, the serving hot path).
+    "qwen_decode": [
+        ("baseline", "qwen2.5-14b", "decode_32k",
+         "40 q-heads unshardable on 16-way model axis -> replicated "
+         "attention weights + projections; bf16 KV cache", None, None),
+        ("pad_heads48", "qwen2.5-14b", "decode_32k",
+         "pad q-heads 40->48 (zero heads, function-preserving) so wq/wo "
+         "shard 16-way: predicts ~2.7GB less replicated weights/device and "
+         "lower memory term",
+         None, {"pad_heads_to": 48}),
+        ("int8_kv", "qwen2.5-14b", "decode_32k",
+         "int8 KV cache with per-(token,head) scales (beyond-paper): "
+         "halves the dominant cache-read traffic; validated to 1.3% logit "
+         "error on the reduced config",
+         None, {"cache_int8": True}),
+        ("pad_heads48_int8", "qwen2.5-14b", "decode_32k",
+         "both optimizations composed",
+         None, {"pad_heads_to": 48, "cache_int8": True}),
+        ("cp_flash_decode", "qwen2.5-14b", "decode_32k",
+         "shard_map context-parallel flash-decode (beyond-paper): local "
+         "online-softmax partials + pmax/psum merge of [B,H,D] tensors "
+         "replace XLA's gathered-softmax over the seq-sharded cache; "
+         "validated exact (4e-7) on an 8-device mesh",
+         None, {"decode_cp": True, "pad_heads_to": 48}),
+        ("cp_flash_decode_int8", "qwen2.5-14b", "decode_32k",
+         "all three levers composed (int8 dequant currently materializes "
+         "outside the shard_map region — measuring whether that erases "
+         "the int8 win)",
+         None, {"decode_cp": True, "pad_heads_to": 48, "cache_int8": True}),
+    ],
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default=None, choices=list(PAIRS) + [None])
+    ap.add_argument("--out", default="runs/hillclimb.jsonl")
+    args = ap.parse_args()
+    pairs = [args.pair] if args.pair else list(PAIRS)
+    for pair in pairs:
+        for name, arch, shape, hypothesis, overrides, variant in PAIRS[pair]:
+            rec = dryrun_one(arch, shape, verbose=False,
+                             overrides=overrides, variant=variant)
+            rec["pair"] = pair
+            rec["iteration"] = name
+            rec["hypothesis"] = hypothesis
+            print(json.dumps({k: rec.get(k) for k in
+                              ("pair", "iteration", "status", "t_compute_s",
+                               "t_memory_s", "t_collective_s", "dominant",
+                               "static_mem_gib", "useful_flops_frac")},
+                             default=str), flush=True)
+            if rec["status"] == "error":
+                print(rec["error"][-1500:], flush=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec, default=str) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,384 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (per-device — the HLO
+module analyzed is the post-SPMD per-device program):
+
+  compute    = HLO_FLOPs / peak_FLOP/s
+  memory     = HLO_bytes / HBM_bw
+  collective = collective_bytes / (links * link_bw)
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO and
+sum result-shape bytes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops (scaled by any enclosing while-loop trip
+count for scan-over-layers bodies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link (~4 usable links/chip)
+ICI_LINKS = 4
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape literal like ``bf16[16,2048]``; tuples handled by
+    the caller via repeated regex matches."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-device result bytes of collective ops in optimized HLO,
+    multiplying ops inside while-loop bodies by the loop trip count
+    (handles nested scans: multipliers compose along the while chain)."""
+    comp_lines, mult, _, _ = _parse_computations(hlo_text)
+    out = {k: 0 for k in _COLLECTIVES}
+    for comp, lines in comp_lines.items():
+        cm = mult.get(comp, 1)
+        for s in lines:
+            for op in _COLLECTIVES:
+                # the result register itself is named %<op>.N, so capture
+                # only the shape text between '=' and the op call; count
+                # async "-start" once, skip "-done".
+                m_op = re.search(rf"=\s*((?:[^=])*?)\b{op}(?:-start)?\(", s)
+                if m_op:
+                    out[op] += _shape_bytes(m_op.group(1)) * cm
+                    break
+    return out
+
+
+def _parse_computations(hlo_text: str):
+    """(comp -> lines, comp -> multiplier, name -> shape-string table).
+
+    Multipliers compose along while-loop chains (scan-over-layers), and
+    flow through ``calls=`` / ``to_apply=`` edges so fusion bodies inherit
+    their call-site's trip count.  XLA's own cost_analysis counts loop
+    bodies ONCE (verified empirically), so this is the only way to get
+    whole-model numbers out of a scanned transformer.
+    """
+    comp_lines: Dict[str, list] = {}
+    edges = []
+    shapes: Dict[str, str] = {}
+    roots: Dict[str, str] = {}
+    current: Optional[str] = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            cm = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", s)
+            current = cm.group(1) if cm else None
+            if current is not None:
+                comp_lines.setdefault(current, [])
+            continue
+        if current is None:
+            continue
+        is_root = s.startswith("ROOT ")
+        if is_root:
+            s = s[5:]
+            roots[current] = s
+        comp_lines[current].append(s)
+        dm = re.match(r"%?([\w.\-]+)\s*=\s*((?:\(.*?\))|(?:[\w\[\],]+(?:\{[\d,]*\})?))\s", s)
+        if dm:
+            shapes[dm.group(1)] = dm.group(2)
+        wm = re.search(r"\bwhile\(.*?body=%?([\w.\-]+)", s)
+        if wm:
+            tm = re.search(r"\"known_trip_count\":\{\"n\":\"(\d+)\"", s)
+            edges.append((current, wm.group(1),
+                          int(tm.group(1)) if tm else 1))
+        for cm2 in re.finditer(r"(?:calls|to_apply|condition)=%?([\w.\-]+)", s):
+            edges.append((current, cm2.group(1), 1))
+    mult: Dict[str, int] = {c: 1 for c in comp_lines}
+    for _ in range(12):
+        changed = False
+        for parent, body, trip in edges:
+            m = mult.get(parent, 1) * trip
+            if mult.get(body, 1) < m:
+                mult[body] = m
+                changed = True
+        if not changed:
+            break
+    return comp_lines, mult, shapes, roots
+
+
+_SKIP_BYTES_OPS = ("parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "copy-done", "after-all")
+
+
+def hlo_costs_scaled(hlo_text: str, detail: bool = False) -> Dict[str, float]:
+    """Trip-count-aware FLOPs and bytes from optimized HLO text.
+
+    flops: 2 * prod(result dims) * prod(lhs contracting dims) per dot.
+    bytes: result + operand bytes per op (the same convention as XLA's
+    'bytes accessed'), fusions counted at their boundary.
+    """
+    comp_lines, mult, shapes, roots = _parse_computations(hlo_text)
+    flops = 0.0
+    bytes_acc = 0.0
+    contributions = []               # (bytes, line) when detail=True
+    fusion_bodies = set()
+    for comp, lines in comp_lines.items():
+        for s in lines:
+            for m in re.finditer(r"calls=%?([\w.\-]+)", s):
+                fusion_bodies.add(m.group(1))
+
+    def op_names(rest: str):
+        inner = rest.split("(", 1)[1] if "(" in rest else ""
+        inner = inner.split(")", 1)[0]
+        return re.findall(r"%([\w.\-]+)", inner)
+
+    # per-fusion-body adjustments:
+    # - a parameter consumed (transitively through bitcast/convert/copy/
+    #   reshape/transpose chains) by a dynamic-slice counts as the slice,
+    #   not the backing buffer;
+    # - a DUS root writes only the update slice and aliases its buffer;
+    # - a pure layout/convert fusion (bf16->f32 upcast: CPU-backend
+    #   artifact, TPUs read bf16 natively) counts one read of its source.
+    _CHAIN = {"bitcast", "convert", "copy", "reshape", "transpose",
+              "parameter", "broadcast"}
+    fusion_param_eff: Dict[str, Dict[int, int]] = {}
+    fusion_result_eff: Dict[str, int] = {}
+    fusion_alias_result: Dict[str, bool] = {}
+    fusion_pure_convert: set = set()
+    for body in fusion_bodies:
+        defs: Dict[str, tuple] = {}
+        ops_seen = set()
+        for s in comp_lines.get(body, []):
+            dm = re.match(r"%?([\w.\-]+)\s*=\s*"
+                          r"((?:\(.*?\))|(?:[\w\[\],]+(?:\{[\d,]*\})?))\s+"
+                          r"([\w\-]+)", s)
+            if not dm:
+                continue
+            name, shp, op = dm.groups()
+            rest_s = s.split("=", 1)[1]
+            defs[name] = (shp, op, op_names(rest_s))
+            ops_seen.add(op)
+
+        def to_param(name: str):
+            seen = 0
+            while seen < 10:
+                pm = re.match(r"param_(\d+)", name)
+                if pm:
+                    return int(pm.group(1))
+                if name in defs and defs[name][1] in _CHAIN and defs[name][2]:
+                    name = defs[name][2][0]
+                    seen += 1
+                    continue
+                return None
+            return None
+
+        if ops_seen and ops_seen <= (_CHAIN | {"constant"}):
+            fusion_pure_convert.add(body)
+        eff: Dict[int, int] = {}
+        for s in comp_lines.get(body, []):
+            ds = re.match(r"%?[\w.\-]+\s*=\s*([\w\[\],]+(?:\{[\d,]*\})?)\s+"
+                          r"dynamic-slice\(%?([\w.\-]+)", s)
+            if ds:
+                idx = to_param(ds.group(2))
+                if idx is not None:
+                    eff[idx] = eff.get(idx, 0) + 2 * _shape_bytes(ds.group(1))
+            dus = re.search(r"dynamic-update-slice\(%?([\w.\-]+),"
+                            r"\s*%?([\w.\-]+)", s)
+            if dus:
+                idx = to_param(dus.group(1))
+                if idx is not None:
+                    eff[idx] = 0                   # aliased in-place buffer
+                upd = dus.group(2)
+                ub = _shape_bytes(shapes.get(upd, "")) \
+                    or _shape_bytes(defs.get(upd, ("",))[0])
+                if s == roots.get(body):
+                    fusion_result_eff[body] = 2 * ub
+                    fusion_alias_result[body] = True
+            sc = re.search(r"\bscatter\(%?([\w.\-]+),\s*%?([\w.\-]+),"
+                           r"\s*%?([\w.\-]+)", s)
+            if sc:
+                idx = to_param(sc.group(1))
+                if idx is not None:
+                    eff[idx] = 0                   # in-place scatter buffer
+                upd = sc.group(3)
+                ub = _shape_bytes(shapes.get(upd, "")) \
+                    or _shape_bytes(defs.get(upd, ("",))[0])
+                if s == roots.get(body):
+                    fusion_result_eff[body] = 2 * ub
+                    fusion_alias_result[body] = True
+        if eff:
+            fusion_param_eff[body] = eff
+
+    for comp, lines in comp_lines.items():
+        cm = mult.get(comp, 1)
+        in_fusion = comp in fusion_bodies
+        for s in lines:
+            dm = re.match(r"%?([\w.\-]+)\s*=\s*(.*)$", s)
+            if not dm:
+                continue
+            rest = dm.group(2)
+            opm = re.match(
+                r"((?:\(.*?\))|(?:[\w\[\],]+(?:\{[\d,]*\})?))\s+([\w\-]+)\(",
+                rest)
+            if not opm:
+                continue
+            shape_str, op = opm.group(1), opm.group(2)
+            if op == "dot":
+                res = 1
+                for _, dims in _SHAPE_RE.findall(shape_str):
+                    for d in (dims.split(",") if dims else []):
+                        res *= int(d)
+                lhs_name = (op_names(rest) or [None])[0]
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                contract = 1
+                if lhs_name and lhs_name in shapes and cdims:
+                    lm = _SHAPE_RE.findall(shapes[lhs_name])
+                    if lm:
+                        ldims = ([int(x) for x in lm[0][1].split(",")]
+                                 if lm[0][1] else [])
+                        for ci in cdims.group(1).split(","):
+                            if ci and int(ci) < len(ldims):
+                                contract *= ldims[int(ci)]
+                flops += 2.0 * res * contract * cm
+            if in_fusion or op in _SKIP_BYTES_OPS or op in (
+                    "while", "conditional", "call"):
+                continue
+            # effective bytes with in-place/slicing special cases: a
+            # dynamic-(update-)slice touches only the slice, never the
+            # backing buffer, and a DUS fusion aliases its big operand.
+            if op == "dynamic-slice":
+                b = 2 * _shape_bytes(shape_str) * cm
+                bytes_acc += b
+                if detail:
+                    contributions.append((b, s[:140]))
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = op_names(rest)
+                upd = ops_[1] if len(ops_) > 1 else None
+                ub = _shape_bytes(shapes.get(upd, "")) if upd else 0
+                bytes_acc += 2 * ub * cm
+                continue
+            if op == "scatter":
+                ops_ = op_names(rest)
+                upd = ops_[2] if len(ops_) > 2 else None
+                ub = _shape_bytes(shapes.get(upd, "")) if upd else 0
+                bytes_acc += 2 * ub * cm
+                if detail:
+                    contributions.append((2 * ub * cm, s[:140]))
+                continue
+            if op == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", rest)
+                body = fm.group(1) if fm else None
+                eff = fusion_param_eff.get(body, {})
+                res_b = _shape_bytes(shape_str)
+                if body in fusion_pure_convert:
+                    b = 0                          # upcast/layout: read-only
+                else:
+                    b = fusion_result_eff.get(body, res_b)
+                dropped_alias = False
+                for i, on in enumerate(op_names(rest)):
+                    if i in eff:
+                        b += eff[i]
+                    elif on in shapes:
+                        ob = _shape_bytes(shapes[on])
+                        if (fusion_alias_result.get(body) and not
+                                dropped_alias and ob == res_b):
+                            dropped_alias = True   # in-place updated buffer
+                            continue
+                        b += ob
+                bytes_acc += b * cm
+                if detail:
+                    contributions.append((b * cm, s[:140]))
+                continue
+            b = _shape_bytes(shape_str)
+            for on in op_names(rest):
+                if on in shapes:
+                    b += _shape_bytes(shapes[on])
+            bytes_acc += b * cm
+            if detail:
+                contributions.append((b * cm, s[:140]))
+    out = {"flops": flops, "bytes": bytes_acc}
+    if detail:
+        out["top"] = sorted(contributions, reverse=True)[:30]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                # per device
+    hbm_bytes: float            # per device
+    coll_bytes: float           # per device
+    coll_by_op: Dict[str, int]
+    peak_mem_bytes: float       # memory_analysis per device
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (ICI_LINKS * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "collective_by_op": self.coll_by_op,
+            "peak_mem_gib": round(self.peak_mem_bytes / 2**30, 3),
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+        }
+
+
+def analyze(compiled, lowered_text: Optional[str] = None) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older API returns [dict]
+        cost = cost[0]
+    text0 = compiled.as_text() if lowered_text is None else lowered_text
+    scaled = hlo_costs_scaled(text0)
+    # XLA counts while bodies once; the scaled parse is trip-count-aware.
+    flops = max(float(cost.get("flops", 0.0)), scaled["flops"])
+    hbm = max(float(cost.get("bytes accessed", 0.0)), scaled["bytes"])
+    mem = compiled.memory_analysis()
+    peak = 0.0
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v and attr != "generated_code_size_in_bytes":
+            peak += float(v)
+    alias = getattr(mem, "alias_size_in_bytes", 0) or 0
+    peak -= float(alias)
+    coll = collective_bytes(text0)
+    return Roofline(flops=flops, hbm_bytes=hbm,
+                    coll_bytes=float(sum(coll.values())), coll_by_op=coll,
+                    peak_mem_bytes=peak)

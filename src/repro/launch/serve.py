@@ -1,0 +1,91 @@
+"""Serving launcher: run the Magnus service against a Poisson workload.
+
+Two backends:
+  --backend sim    : roofline-cost cluster simulator at paper scale
+  --backend engine : the real JAX engine on a reduced config (CPU)
+
+    PYTHONPATH=src python -m repro.launch.serve --arch chatglm-6b \
+        --strategy magnus --rate 8 --duration 60
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.serving.cost_model import TPU_V5E, V100_32G
+from repro.sim.runner import run_strategy
+from repro.workload.apps import make_dataset
+from repro.workload.generator import poisson_workload
+
+
+def run_engine_backend(arch: str, rate: float, duration: float,
+                       strategy: str, seed: int = 0) -> dict:
+    """Serve a reduced model for real on CPU with Magnus batching."""
+    import numpy as np
+
+    from repro.core.magnus import MagnusConfig, MagnusService
+    from repro.core.predictor import GenerationLengthPredictor
+    from repro.core.wma import MemoryModel
+    from repro.serving.engine import BatchEngine
+
+    cfg = get_config(arch).reduced()
+    memory = MemoryModel(cfg, hbm_bytes=2 * 2 ** 30, max_len=256, max_gen=32)
+    predictor = GenerationLengthPredictor(seed=seed).fit(
+        make_dataset(60, seed=seed + 1))
+    svc = MagnusService(memory, MagnusConfig(strategy=strategy),
+                        predictor=predictor)
+    engine = BatchEngine(cfg, max_gen=32)
+    wl = poisson_workload(rate, duration, seed=seed, max_len=200, max_gen=32)
+    now, served, results = 0.0, 0, []
+    for r in wl:
+        svc.on_request(r, r.arrival_time)
+    while len(svc.batcher.queue) > 0:
+        b = svc.next_batch(now)
+        if b is None:
+            break
+        res = engine.serve_batch(b)
+        results.append(res)
+        served += b.size
+        now += res.wall_time
+    total_tokens = sum(r.total_tokens for r in results)
+    valid = sum(r.valid_tokens for r in results)
+    wma = sum(r.wma for r in results)
+    return {"requests": served, "batches": len(results),
+            "wall_s": round(now, 2),
+            "token_tp": round(total_tokens / max(now, 1e-9), 1),
+            "valid_token_tp": round(valid / max(now, 1e-9), 1),
+            "wma_total": wma}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm-6b")
+    ap.add_argument("--strategy", default="magnus",
+                    choices=["vs", "vsq", "ccb", "glp", "abp", "magnus"])
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--duration", type=float, default=60.0)
+    ap.add_argument("--instances", type=int, default=7)
+    ap.add_argument("--backend", default="sim", choices=["sim", "engine"])
+    ap.add_argument("--hw", default="v100", choices=["v100", "v5e"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.backend == "engine":
+        out = run_engine_backend(args.arch, args.rate, args.duration,
+                                 args.strategy, args.seed)
+        print(json.dumps(out, indent=2))
+        return
+    cfg = get_config(args.arch)
+    wl = poisson_workload(args.rate, args.duration, seed=args.seed)
+    hw = V100_32G if args.hw == "v100" else TPU_V5E
+    m = run_strategy(args.strategy, wl, cfg, hw=hw,
+                     n_instances=args.instances,
+                     kv_dtype_bytes=4 if args.hw == "v100" else 2,
+                     train_requests=make_dataset(100, seed=args.seed + 1),
+                     seed=args.seed)
+    print(json.dumps(m.summary(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

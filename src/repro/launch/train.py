@@ -1,0 +1,51 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 100 --batch-size 8 --seq-len 256 [--reduced] \
+        [--ckpt runs/ck.npz]
+
+Full configs train on the production mesh via pjit (use the dry-run to
+validate sharding); --reduced trains the CPU-sized variant for real.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.train.data import DataConfig
+from repro.train.trainer import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--d-model", type=int, default=256,
+                    help="reduced-variant width")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(num_layers=args.layers, d_model=args.d_model)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps @ b={args.batch_size} s={args.seq_len}")
+    out = train(cfg,
+                TrainConfig(steps=args.steps, log_every=args.log_every,
+                            ckpt_path=args.ckpt),
+                DataConfig(batch_size=args.batch_size, seq_len=args.seq_len),
+                act_dtype=jnp.float32)
+    final = out["history"][-1]
+    print(f"done: loss {final['loss']:.4f} in {final['wall']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Parameter specs and common layer primitives (no flax — plain pytrees).
+
+Parameters are declared as :class:`ParamSpec` pytrees; ``materialize`` turns
+a spec tree into concrete arrays (deterministic per-path RNG), ``axes_of``
+extracts the logical-axes pytree, and ``abstract_of`` yields
+ShapeDtypeStructs for dry-runs without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: float = 1.0            # stddev multiplier (normal)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def materialize(spec_tree: Any, key: jax.Array, dtype=None) -> Any:
+    """Instantiate a ParamSpec tree into arrays.  RNG is derived from the
+    tree path so adding parameters never reshuffles existing ones."""
+    paths = jax.tree_util.tree_flatten_with_path(spec_tree, is_leaf=is_spec)[0]
+
+    def make(path, spec: ParamSpec):
+        d = dtype or spec.dtype
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, d)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, d)
+        # stable per-path hash: Python's hash() is salted per process,
+        # which would make init weights irreproducible across runs
+        digest = hashlib.blake2b(
+            jax.tree_util.keystr(path).encode(), digest_size=4).digest()
+        k = jax.random.fold_in(key, int.from_bytes(digest, "little"))
+        fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+        std = spec.scale / np.sqrt(fan_in)
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(d)
+
+    leaves = [make(p, s) for p, s in paths]
+    treedef = jax.tree_util.tree_structure(spec_tree, is_leaf=is_spec)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def axes_of(spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def abstract_of(spec_tree: Any, dtype=None) -> Any:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Numeric primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D] (or [..., 1, H, D] in decode), positions: [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed positional embeddings."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), jnp.float32)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def mlp_spec(d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    return {
+        "gate": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "up": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "down": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def gelu_mlp_spec(d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    return {
+        "up": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "up_b": ParamSpec((d_ff,), ("mlp",), init="zeros", dtype=dtype),
+        "down": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+        "down_b": ParamSpec((d_model,), ("embed",), init="zeros", dtype=dtype),
+    }

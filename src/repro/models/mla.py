@@ -1,0 +1,137 @@
+"""Multi-head latent attention (DeepSeek-V2/V3).
+
+Prefill/train use the naive (materialized K/V) path blockwise; decode uses
+the *absorbed* path — queries are projected into the KV latent space so the
+cache stays compressed (kv_lora + rope dims per token) and no [S, H, D]
+key/value tensors are ever materialized against a 32k cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig
+from repro.models.attention import NEG_INF, _pick_chunk
+from repro.models.layers import ParamSpec, apply_rope, rms_norm
+
+
+def mla_spec(d_model: int, num_heads: int, m: MLAConfig,
+             dtype=jnp.float32) -> dict:
+    qh = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "q_a": ParamSpec((d_model, m.q_lora_rank), ("embed", "lora"), dtype=dtype),
+        "q_a_norm": ParamSpec((m.q_lora_rank,), ("lora",), init="ones", dtype=dtype),
+        "q_b": ParamSpec((m.q_lora_rank, num_heads, qh),
+                         ("lora", "q_heads", "head_dim"), dtype=dtype),
+        "kv_a": ParamSpec((d_model, m.kv_lora_rank + m.qk_rope_dim),
+                          ("embed", "lora"), dtype=dtype),
+        "kv_a_norm": ParamSpec((m.kv_lora_rank,), ("lora",), init="ones", dtype=dtype),
+        "k_b": ParamSpec((m.kv_lora_rank, num_heads, m.qk_nope_dim),
+                         ("lora", "q_heads", "head_dim"), dtype=dtype),
+        "v_b": ParamSpec((m.kv_lora_rank, num_heads, m.v_head_dim),
+                         ("lora", "q_heads", "head_dim"), dtype=dtype),
+        "out": ParamSpec((num_heads, m.v_head_dim, d_model),
+                         ("q_heads", "head_dim", "embed"), dtype=dtype),
+    }
+
+
+def _queries(p: dict, x: jax.Array, m: MLAConfig, num_heads: int,
+             positions: jax.Array, theta: float):
+    q_lat = rms_norm(x @ p["q_a"], p["q_a_norm"])
+    q = jnp.einsum("bsr,rhd->bshd", q_lat, p["q_b"])
+    q_nope = q[..., :m.qk_nope_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_dim:], positions, theta)
+    return q_nope, q_rope
+
+
+def mla_latents(p: dict, x: jax.Array, m: MLAConfig, positions: jax.Array,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """Compressed cache entries: c_kv [B,S,R], k_rope [B,S,Dr] (head-shared)."""
+    kv = x @ p["kv_a"]
+    c_kv = rms_norm(kv[..., :m.kv_lora_rank], p["kv_a_norm"])
+    k_rope = apply_rope(kv[..., None, m.kv_lora_rank:], positions, theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_prefill(p: dict, x: jax.Array, m: MLAConfig, num_heads: int,
+                positions: jax.Array, theta: float,
+                chunk: int = 1024) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Causal MLA over a full sequence; returns (out [B,S,d], latent cache).
+
+    K/V are expanded from the latent *per KV-chunk* inside an online-softmax
+    scan, so peak memory is O(S * chunk) not O(S^2) nor O(S*H*D).
+    """
+    b, s, _ = x.shape
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    q_nope, q_rope = _queries(p, x, m, num_heads, positions, theta)
+    c_kv, k_rope = mla_latents(p, x, m, positions, theta)
+    ck = _pick_chunk(s, chunk)
+    n_blocks = s // ck
+    q_pos = positions
+
+    qn = q_nope.astype(jnp.float32) * scale
+    qr = q_rope.astype(jnp.float32) * scale
+
+    def body(carry, i):
+        acc, mx, l = carry
+        c_blk = jax.lax.dynamic_slice_in_dim(c_kv, i * ck, ck, 1)
+        r_blk = jax.lax.dynamic_slice_in_dim(k_rope, i * ck, ck, 1)
+        k_nope = jnp.einsum("bkr,rhd->bkhd", c_blk, p["k_b"])
+        v_blk = jnp.einsum("bkr,rhd->bkhd", c_blk, p["v_b"])
+        sc = jnp.einsum("bqhd,bkhd->bqhk", qn, k_nope.astype(jnp.float32)) \
+            + jnp.einsum("bqhd,bkd->bqhk", qr, r_blk.astype(jnp.float32))
+        k_pos = i * ck + jnp.arange(ck)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        sc = jnp.where(mask[None, :, None, :], sc, NEG_INF)
+        m_new = jnp.maximum(mx, sc.max(-1))
+        pr = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(mx - m_new)
+        l_new = l * alpha + pr.sum(-1)
+        pv = jnp.einsum("bqhk,bkhd->bqhd", pr, v_blk.astype(jnp.float32))
+        return (acc * alpha[..., None] + pv, m_new, l_new), None
+
+    h = num_heads
+    acc0 = jnp.zeros((b, s, h, m.v_head_dim), jnp.float32)
+    m0 = jnp.full((b, s, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, h), jnp.float32)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (acc, _, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(n_blocks))
+    o = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.einsum("bshd,hdm->bsm", o.astype(x.dtype), p["out"])
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p: dict, x: jax.Array, m: MLAConfig, num_heads: int,
+               cache: Tuple[jax.Array, jax.Array], lengths: jax.Array,
+               positions: jax.Array, theta: float
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Absorbed-path single-token MLA. x: [B,1,d]; cache: (c_kv [B,S,R],
+    k_rope [B,S,Dr]); positions: [B] absolute position of the new token.
+    The cache is a ring buffer when capacity < positions (SWA configs)."""
+    b = x.shape[0]
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    q_nope, q_rope = _queries(p, x, m, num_heads, positions[:, None], theta)
+    c_new, r_new = mla_latents(p, x, m, positions[:, None], theta)
+    c_kv, k_rope = cache
+    s = c_kv.shape[1]
+    slot = positions % s
+    c_kv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n.astype(c.dtype), i, 0))(c_kv, c_new, slot)
+    k_rope = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n.astype(c.dtype), i, 0))(k_rope, r_new, slot)
+
+    # absorb: q_lat[b,h,r] = q_nope[b,h,dn] @ k_b[r,h,dn]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       p["k_b"].astype(jnp.float32)) * scale
+    qr = q_rope[:, 0].astype(jnp.float32) * scale
+    sc = jnp.einsum("bhr,bkr->bhk", q_lat, c_kv.astype(jnp.float32)) \
+        + jnp.einsum("bhd,bkd->bhk", qr, k_rope.astype(jnp.float32))
+    valid = jnp.arange(s)[None, :] < jnp.minimum(positions + 1, s)[:, None]
+    sc = jnp.where(valid[:, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    o_lat = jnp.einsum("bhk,bkr->bhr", pr, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, p["v_b"].astype(jnp.float32))
+    out = jnp.einsum("bhd,hdm->bm", o.astype(x.dtype), p["out"])[:, None]
+    return out, (c_kv, k_rope)

@@ -1,0 +1,129 @@
+"""Family-dispatching facade: one API for all ten architectures.
+
+batch dicts:
+  train   : {"tokens": [B,S] int32, +"patches"/"frames" for vlm/audio}
+  prefill : {"tokens": [B,S], "lengths": [B], +frontend embeds}
+  decode  : {"tokens": [B], "positions": [B]} against a cache pytree
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models import encdec, transformer
+
+
+def _is_encdec(cfg: ModelConfig) -> bool:
+    return cfg.family == "audio"
+
+
+def model_spec(cfg, dtype=jnp.float32):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return mod.model_spec(cfg, dtype)
+
+
+def init_params(cfg, key, dtype=jnp.float32):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return mod.init_params(cfg, key, dtype)
+
+
+def param_axes(cfg, dtype=jnp.float32):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return mod.param_axes(cfg, dtype)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any], *, rules=None,
+            act_dtype=jnp.bfloat16):
+    if _is_encdec(cfg):
+        return encdec.lm_loss(params, cfg, batch["tokens"], batch["frames"],
+                              rules=rules, act_dtype=act_dtype)
+    return transformer.lm_loss(params, cfg, batch["tokens"],
+                               patches=batch.get("patches"), rules=rules,
+                               act_dtype=act_dtype)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *, rules=None,
+            act_dtype=jnp.bfloat16, cache_len: Optional[int] = None):
+    if _is_encdec(cfg):
+        return encdec.prefill(params, cfg, batch["tokens"], batch["lengths"],
+                              batch["frames"], rules=rules,
+                              act_dtype=act_dtype, cache_len=cache_len)
+    return transformer.prefill(params, cfg, batch["tokens"], batch["lengths"],
+                               patches=batch.get("patches"), rules=rules,
+                               act_dtype=act_dtype, cache_len=cache_len)
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, Any], *,
+                rules=None, act_dtype=jnp.bfloat16):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return mod.decode_step(params, cfg, cache, batch["tokens"],
+                           batch["positions"], rules=rules,
+                           act_dtype=act_dtype)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return mod.cache_struct(cfg, batch, seq, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    mod = encdec if _is_encdec(cfg) else transformer
+    return mod.init_cache(cfg, batch, seq, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Shapes for dry-runs: ShapeDtypeStruct stand-ins, no allocation
+# ---------------------------------------------------------------------------
+
+def decode_cache_len(cfg: ModelConfig, shape: InputShape) -> int:
+    """Cache capacity for a decode shape: full seq_len, or the sliding
+    window for SWA / long-context runs."""
+    if cfg.family == "ssm":
+        return 1  # unused; ssm caches are constant-size states
+    if shape.name == "long_500k":
+        return cfg.sliding_window or 8192
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, shape.seq_len)
+    return shape.seq_len
+
+
+def supports_shape(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family == "audio":
+        return False, ("enc-dec speech model: 448-token decoder context and "
+                       "a fixed 30s audio window make a 524288-token decode "
+                       "architecturally meaningless (see DESIGN.md)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                cache_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins (+ logical axes) for every model input of
+    the given workload shape."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, i32)
+    emb = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.bfloat16)
+    specs: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        s_text = s - cfg.num_patches if cfg.family == "vlm" else s
+        specs["tokens"] = tok(b, s_text)
+        axes["tokens"] = ("act_batch", "act_seq")
+        if cfg.family == "vlm":
+            specs["patches"] = emb(b, cfg.num_patches, cfg.d_model)
+            axes["patches"] = ("act_batch", None, "act_embed")
+        if cfg.family == "audio":
+            specs["frames"] = emb(b, cfg.encoder_seq, cfg.d_model)
+            axes["frames"] = ("act_batch", None, "act_embed")
+        if shape.kind == "prefill":
+            specs["lengths"] = tok(b)
+            axes["lengths"] = ("act_batch",)
+    else:  # decode: one new token against a seq_len cache
+        specs["tokens"] = tok(b)
+        specs["positions"] = tok(b)
+        axes["tokens"] = ("act_batch",)
+        axes["positions"] = ("act_batch",)
+    return {"specs": specs, "axes": axes}

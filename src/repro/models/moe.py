@@ -1,0 +1,141 @@
+"""Mixture-of-experts FFN with Switch-style capacity dispatch.
+
+Tokens are grouped ([G, Tg, d], groups follow the batch sharding), routed
+top-k with a per-(group, expert) capacity, dispatched via one-hot einsums and
+processed by expert-sharded grouped matmuls.  With experts sharded on
+('model') — or ('data','model') for deepseek-v3's 256 experts on a 16x16
+mesh — XLA SPMD materializes the expert all-to-all from these einsums.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import ParamSpec
+from repro.partitioning import constrain
+
+
+def moe_spec(d_model: int, m: MoEConfig, dtype=jnp.float32) -> dict:
+    e, f = m.num_experts, m.d_ff_expert
+    spec = {
+        "router": ParamSpec((d_model, e), ("embed", "experts"), dtype=jnp.float32),
+        "gate": ParamSpec((e, d_model, f), ("experts", "embed", "expert_mlp"), dtype=dtype),
+        "up": ParamSpec((e, d_model, f), ("experts", "embed", "expert_mlp"), dtype=dtype),
+        "down": ParamSpec((e, f, d_model), ("experts", "expert_mlp", "embed"), dtype=dtype),
+    }
+    if m.num_shared:
+        fs = f * m.num_shared
+        spec["shared"] = {
+            "gate": ParamSpec((d_model, fs), ("embed", "mlp"), dtype=dtype),
+            "up": ParamSpec((d_model, fs), ("embed", "mlp"), dtype=dtype),
+            "down": ParamSpec((fs, d_model), ("mlp", "embed"), dtype=dtype),
+        }
+    return spec
+
+
+def _num_groups(t: int, target: int) -> int:
+    """Largest G with T % G == 0 and T/G <= target (Tg ~ target)."""
+    g = max(1, math.ceil(t / target))
+    while t % g:
+        g += 1
+    return g
+
+
+def moe_forward(p: dict, x: jax.Array, m: MoEConfig,
+                rules: Optional[dict] = None, group_size: int = 256
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux load-balance loss scalar)."""
+    bsz, s, d = x.shape
+    t = bsz * s
+    e, k = m.num_experts, m.top_k
+    g = _num_groups(t, group_size)
+    tg = t // g
+    cap = max(1, math.ceil(tg * k / e * m.capacity_factor))
+
+    xt = x.reshape(g, tg, d)
+    xt = constrain(xt, ("expert_groups", None, "act_embed"), rules)
+    logits = (xt.astype(jnp.float32) @ p["router"])            # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                   # [G,Tg,K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    sel = jax.nn.one_hot(idx, e, dtype=jnp.float32)            # [G,Tg,K,E]
+    # position of each (token, k) inside its expert's capacity buffer:
+    # rank over the flattened (Tg, K) order, per group & expert.
+    flat = sel.reshape(g, tg * k, e)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # [G,Tg*K,E]
+    pos = pos.reshape(g, tg, k, e)
+    in_cap = (pos < cap) & (sel > 0)
+    # reduce the K dim *before* building the capacity one-hot: each token
+    # picks an expert at most once, so the [G,T,E] projections are exact and
+    # the big dispatch tensor stays [G,T,E,C] (no K blow-up).
+    sel_ok = jnp.where(in_cap, 1.0, 0.0) * sel                 # [G,T,K,E]
+    sel_e = sel_ok.sum(2)                                      # [G,T,E]
+    pos_e = (pos * sel_ok).sum(2).astype(jnp.int32)
+    gate_e = (gate_vals[..., None] * sel_ok).sum(2)
+    pos_oh = jax.nn.one_hot(pos_e, cap, dtype=jnp.bfloat16)    # [G,T,E,C]
+    dispatch = sel_e.astype(jnp.bfloat16)[..., None] * pos_oh
+    combine = gate_e.astype(jnp.bfloat16)[..., None] * pos_oh
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xt)
+    xe = constrain(xe, ("expert_groups", "act_heads", None, None), rules)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["gate"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["up"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["down"])
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    y = y.reshape(bsz, s, d)
+
+    # Switch aux loss: E * mean_e( frac_tokens_e * mean_prob_e )
+    frac = sel.sum(2).mean(axis=(0, 1))                        # [E]
+    mean_p = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_p) * m.router_aux_coef
+
+    if m.num_shared:
+        sh = p["shared"]
+        y = y + (jax.nn.silu(x @ sh["gate"]) * (x @ sh["up"])) @ sh["down"]
+    return y, aux
+
+
+def moe_forward_ragged(p: dict, x: jax.Array, m: MoEConfig,
+                       rules: Optional[dict] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Dropless MoE via sort + ``jax.lax.ragged_dot`` (§Perf H4 follow-up):
+    no capacity padding — every routed token is computed exactly once, so
+    the T*E*C over-provisioning of the Switch dispatch disappears.
+
+    x: [B, S, d] -> (y, aux).  Numerically equivalent to ``moe_forward``
+    with capacity_factor = inf (no drops).
+    """
+    bsz, s, d = x.shape
+    t = bsz * s
+    e, k = m.num_experts, m.top_k
+    xt = x.reshape(t, d)
+    logits = xt.astype(jnp.float32) @ p["router"]              # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                   # [T, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_ids = idx.reshape(t * k)                              # [T*K]
+    order = jnp.argsort(flat_ids)
+    inv = jnp.argsort(order)
+    xr = jnp.repeat(xt, k, axis=0)[order]                      # [T*K, d]
+    group_sizes = jnp.bincount(flat_ids, length=e).astype(jnp.int32)
+
+    h = jax.nn.silu(jax.lax.ragged_dot(xr, p["gate"], group_sizes))         * jax.lax.ragged_dot(xr, p["up"], group_sizes)
+    yr = jax.lax.ragged_dot(h, p["down"], group_sizes)         # [T*K, d]
+    yr = yr[inv] * gate_vals.reshape(t * k, 1).astype(yr.dtype)
+    y = yr.reshape(t, k, d).sum(axis=1).reshape(bsz, s, d)
+
+    sel = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+    frac = sel.sum(1).mean(axis=0)
+    aux = e * jnp.sum(frac * probs.mean(axis=0)) * m.router_aux_coef
+    if m.num_shared:
+        sh = p["shared"]
+        y = y + (jax.nn.silu(x @ sh["gate"]) * (x @ sh["up"])) @ sh["down"]
+    return y, aux

@@ -1,0 +1,179 @@
+"""Mamba2 (state-space duality / SSD) block — pure-jnp chunked scan.
+
+The chunked scan follows the SSD decomposition of arXiv:2405.21060:
+within-chunk "dual" (attention-like) term + inter-chunk recurrent state pass.
+`repro.kernels.ssd_scan` is the Pallas TPU kernel for the same computation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import ParamSpec, rms_norm
+
+
+def mamba_spec(d_model: int, s: SSMConfig, d_inner: Optional[int] = None,
+               dtype=jnp.float32) -> dict:
+    d_in = d_inner or s.d_inner(d_model)
+    n_h = d_in // s.head_dim
+    n = s.d_state
+    conv_dim = d_in + 2 * n
+    proj = 2 * d_in + 2 * n + n_h
+    return {
+        "in_proj": ParamSpec((d_model, proj), ("embed", "ssm_inner"), dtype=dtype),
+        "conv_w": ParamSpec((conv_dim, s.conv_kernel), ("ssm_inner", "conv"),
+                            scale=1.0, dtype=dtype),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), init="zeros", dtype=dtype),
+        "A_log": ParamSpec((n_h,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "D": ParamSpec((n_h,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamSpec((n_h,), ("ssm_heads",), init="zeros", dtype=jnp.float32),
+        "norm_w": ParamSpec((d_in,), ("ssm_inner",), init="ones", dtype=dtype),
+        "out_proj": ParamSpec((d_in, d_model), ("ssm_inner", "embed"), dtype=dtype),
+    }
+
+
+def _split_proj(p, x, d_in, n, n_h):
+    zxbcdt = x @ p["in_proj"]
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, xs, b, c, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d, xbc: [B, S, C], w: [C, K]."""
+    k = w.shape[-1]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[:, i] for i in range(k))
+    return jax.nn.silu(out + bias)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int,
+                state0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan. x: [B,S,H,P]; dt: [B,S,H] (post-softplus); a: [H] (<0);
+    b,c: [B,S,N] (single group). Returns y [B,S,H,P], final state [B,H,P,N].
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    while s % chunk:
+        chunk -= 1
+    n_chunks = s // chunk
+
+    xc = x.reshape(bsz, n_chunks, chunk, h, p)
+    dtc = dt.reshape(bsz, n_chunks, chunk, h)
+    bc = b.reshape(bsz, n_chunks, chunk, n)
+    cc = c.reshape(bsz, n_chunks, chunk, n)
+
+    da = dtc * a[None, None, None, :]                     # [B,Nc,L,H]
+    cum = jnp.cumsum(da, axis=2)                          # running log-decay
+    tot = cum[:, :, -1, :]                                # [B,Nc,H]
+
+    # --- intra-chunk dual (attention-like) term ---
+    li = cum[:, :, :, None, :]                            # [B,Nc,Li,1,H]
+    lj = cum[:, :, None, :, :]                            # [B,Nc,1,Lj,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], li - lj, -1e30))
+    cb = jnp.einsum("bzin,bzjn->bzij", cc, bc)            # [B,Nc,Li,Lj]
+    w = cb[..., None] * decay * dtc[:, :, None, :, :]     # [B,Nc,Li,Lj,H]
+    y_intra = jnp.einsum("bzijh,bzjhp->bzihp", w, xc)
+
+    # --- chunk states and inter-chunk recurrence ---
+    decay_out = jnp.exp(tot[:, :, None, :] - cum)         # [B,Nc,L,H]
+    xdt = xc * (dtc * decay_out)[..., None]
+    chunk_states = jnp.einsum("bzln,bzlhp->bzhpn", bc, xdt)
+
+    def step(state, inp):
+        cs, t = inp                                       # [B,H,P,N], [B,H]
+        out_state = state
+        new = state * jnp.exp(t)[:, :, None, None] + cs
+        return new, out_state
+
+    state0 = (jnp.zeros((bsz, h, p, n), jnp.float32)
+              if state0 is None else state0.astype(jnp.float32))
+    final, states_in = jax.lax.scan(
+        step, state0,
+        (jnp.moveaxis(chunk_states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(tot, 1, 0).astype(jnp.float32)))
+    states_in = jnp.moveaxis(states_in, 0, 1)             # [B,Nc,H,P,N]
+
+    y_inter = jnp.einsum("bzln,bzhpn->bzlhp", cc,
+                         states_in.astype(cc.dtype)) * jnp.exp(cum)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final
+
+
+def mamba_forward(p: dict, x: jax.Array, s: SSMConfig, d_inner: int,
+                  state0=None, return_state: bool = False):
+    """Full-sequence mamba2 block. x: [B,S,d_model] -> [B,S,d_model]."""
+    n, n_h = s.d_state, d_inner // s.head_dim
+    z, xs, b, c, dt = _split_proj(p, x, d_inner, n, n_h)
+    xbc = _causal_conv(jnp.concatenate([xs, b, c], -1), p["conv_w"], p["conv_b"])
+    xs, b, c = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    xh = xs.reshape(*xs.shape[:-1], n_h, s.head_dim)
+    y, state = ssd_chunked(xh.astype(jnp.float32), dt, a,
+                           b.astype(jnp.float32), c.astype(jnp.float32),
+                           s.chunk_size,
+                           state0=state0[0] if state0 is not None else None)
+    y = y + xh.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(*xs.shape).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"]
+    if return_state:
+        # conv state: last (K-1) pre-activation conv inputs
+        _, xs_raw, b_raw, c_raw, _ = _split_proj(p, x, d_inner, n, n_h)
+        raw = jnp.concatenate([xs_raw, b_raw, c_raw], -1)
+        k = s.conv_kernel
+        pad = jnp.pad(raw, ((0, 0), (k - 1, 0), (0, 0)))
+        conv_state = pad[:, -(k - 1):, :] if k > 1 else pad[:, :0, :]
+        conv_state = jnp.moveaxis(conv_state, 1, 2)       # [B, C, K-1]
+        return out, (state, conv_state)
+    return out
+
+
+def mamba_decode(p: dict, x: jax.Array, s: SSMConfig, d_inner: int,
+                 state: Tuple[jax.Array, jax.Array]):
+    """Single-token recurrent step. x: [B,1,d_model]; state: (ssd, conv)."""
+    ssd_state, conv_state = state                         # [B,H,P,N], [B,C,K-1]
+    n, n_h = s.d_state, d_inner // s.head_dim
+    z, xs, b, c, dt = _split_proj(p, x[:, 0, :], d_inner, n, n_h)
+    raw = jnp.concatenate([xs, b, c], -1)                 # [B, C]
+    window = jnp.concatenate([conv_state, raw[:, :, None]], axis=-1)  # [B,C,K]
+    conv_out = jax.nn.silu(jnp.einsum("bck,ck->bc", window, p["conv_w"])
+                           + p["conv_b"])
+    new_conv = window[:, :, 1:]
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,H]
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                  # [B,H]
+    xh = xs.reshape(-1, n_h, s.head_dim).astype(jnp.float32)
+    upd = (dt[..., None, None] * xh[..., None]
+           * b[:, None, None, :].astype(jnp.float32))     # [B,H,P,N]
+    new_state = ssd_state * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c.astype(jnp.float32))
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(x.shape[0], d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return (y @ p["out_proj"])[:, None, :], (new_state, new_conv)
+
+
+def mamba_state_spec(cfg: ModelConfig, batch: int, d_inner: int,
+                     dtype=jnp.float32):
+    """(shapes, logical axes) of the per-layer recurrent state."""
+    s = cfg.ssm
+    n_h = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.d_state
+    shapes = (
+        (batch, n_h, s.head_dim, s.d_state),
+        (batch, conv_dim, s.conv_kernel - 1),
+    )
+    axes = (
+        ("cache_batch", "ssm_heads", None, None),
+        ("cache_batch", "ssm_inner", None),
+    )
+    return shapes, axes

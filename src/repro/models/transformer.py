@@ -1,0 +1,498 @@
+"""Decoder-only transformer covering the dense / moe / vlm / hybrid / ssm
+families, with three lowered entry points:
+
+- ``forward_train``  : full-sequence logits (+ MoE aux, + MTP loss inputs)
+- ``prefill``        : full-sequence pass that also returns the decode cache
+- ``decode_step``    : one token against the cache (KV, MLA-latent, or SSM
+                       state; ring-buffer for sliding-window attention)
+
+Layers are stacked on a leading ``layers`` axis and executed with
+``lax.scan`` so the HLO stays compact for 48-61 layer configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import mla as mla_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (ParamSpec, apply_rope, axes_of, is_spec,
+                                 materialize, mlp_spec, rms_norm, swiglu)
+from repro.partitioning import constrain
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def _attn_spec(cfg: ModelConfig, dtype) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    hq = max(hq, cfg.pad_heads_to)   # shardability padding (zero heads)
+    spec = {
+        "wq": ParamSpec((d, hq, hd), ("embed", "q_heads", "head_dim"), dtype=dtype),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim"), dtype=dtype),
+        "wo": ParamSpec((hq, hd, d), ("q_heads", "head_dim", "embed"), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((hq, hd), ("q_heads", "head_dim"), init="zeros", dtype=dtype)
+        spec["bk"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), init="zeros", dtype=dtype)
+        spec["bv"] = ParamSpec((hkv, hd), ("kv_heads", "head_dim"), init="zeros", dtype=dtype)
+    return spec
+
+
+def _block_spec(cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    spec: Dict[str, Any] = {
+        "norm1": ParamSpec((d,), ("embed",), init="ones", dtype=dtype),
+    }
+    if cfg.family == "ssm":
+        spec["mamba"] = ssm_lib.mamba_spec(d, cfg.ssm, dtype=dtype)
+        return spec
+    # attention sub-layer
+    if cfg.uses_mla:
+        spec["mla"] = mla_lib.mla_spec(d, cfg.num_heads, cfg.mla, dtype=dtype)
+    else:
+        spec["attn"] = _attn_spec(cfg, dtype)
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * d // 2
+        spec["mamba"] = ssm_lib.mamba_spec(d, cfg.ssm, d_inner=d_inner, dtype=dtype)
+    # ffn sub-layer
+    spec["norm2"] = ParamSpec((d,), ("embed",), init="ones", dtype=dtype)
+    if cfg.moe is not None:
+        spec["moe"] = moe_lib.moe_spec(d, cfg.moe, dtype=dtype)
+    else:
+        spec["mlp"] = mlp_spec(d, cfg.d_ff, dtype=dtype)
+    return spec
+
+
+def _stack(spec_tree, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.scale, s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def model_spec(cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    spec: Dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), scale=1.0, dtype=dtype),
+        "blocks": _stack(_block_spec(cfg, dtype), cfg.num_layers),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones", dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamSpec((d, v), ("embed", "vocab"), dtype=dtype)
+    if cfg.family == "vlm":
+        spec["projector"] = ParamSpec((d, d), ("embed", "embed_out"), dtype=dtype)
+    if cfg.mtp_depth:
+        spec["mtp"] = {
+            "proj": ParamSpec((2 * d, d), ("embed", "embed_out"), dtype=dtype),
+            "block": _block_spec(cfg, dtype),
+            "norm_h": ParamSpec((d,), ("embed",), init="ones", dtype=dtype),
+            "norm_e": ParamSpec((d,), ("embed",), init="ones", dtype=dtype),
+        }
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return materialize(model_spec(cfg, dtype), key)
+
+
+def param_axes(cfg: ModelConfig, dtype=jnp.float32):
+    return axes_of(model_spec(cfg, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _attention(ap: dict, x, cfg: ModelConfig, positions, *, rules,
+               window, q_offset: int = 0):
+    """Full-sequence GQA attention; returns (out, (k, v))."""
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None), rules)
+    out = attn_lib.gqa_prefill_attention(q, k, v, causal=True, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, ap["wo"]), (k, v)
+
+
+def _quant_i8(t):
+    """Symmetric int8 quant over the head_dim axis: t [B,1,H,D] ->
+    (int8 values, bf16 scales [B,1,H])."""
+    sc = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    sc = jnp.maximum(sc, 1e-8)
+    q = jnp.round(t.astype(jnp.float32) / sc[..., None])
+    return q.astype(jnp.int8), sc.astype(jnp.bfloat16)
+
+
+def _attention_decode(ap: dict, x, cfg: ModelConfig, kv_cache, lengths,
+                      positions, *, rules, window):
+    """One-token GQA attention; returns (out, new (k, v) cache).
+    With ``cfg.cache_int8`` the cache is (k_i8, v_i8, k_scale, v_scale)."""
+    int8 = cfg.cache_int8
+    if int8:
+        k_cache, v_cache, k_sc, v_sc = kv_cache
+    else:
+        k_cache, v_cache = kv_cache
+    s_cache = k_cache.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = apply_rope(q, positions[:, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    slot = positions % s_cache                            # ring when windowed
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n, i, 0))
+    if int8:
+        k_q, k_s = _quant_i8(k)
+        v_q, v_s = _quant_i8(v)
+        k_cache = upd(k_cache, k_q, slot)
+        v_cache = upd(v_cache, v_q, slot)
+        k_sc = upd(k_sc, k_s, slot)
+        v_sc = upd(v_sc, v_s, slot)
+        k_deq = k_cache.astype(jnp.bfloat16) * k_sc[..., None]
+        v_deq = v_cache.astype(jnp.bfloat16) * v_sc[..., None]
+    else:
+        k_cache = upd(k_cache, k.astype(k_cache.dtype), slot)
+        v_cache = upd(v_cache, v.astype(v_cache.dtype), slot)
+        k_deq, v_deq = k_cache, v_cache
+    valid = jnp.minimum(positions + 1, s_cache)
+    mesh = (rules or {}).get("_mesh")
+    if (cfg.decode_cp and mesh is not None
+            and "model" in mesh.axis_names
+            and s_cache % dict(zip(mesh.axis_names,
+                                   mesh.devices.shape))["model"] == 0):
+        batch_axes = (rules or {}).get("cache_batch", ("data",))
+        out = attn_lib.gqa_decode_attention_cp(
+            q, k_deq, v_deq, valid, mesh=mesh, batch_axes=batch_axes)
+    else:
+        out = attn_lib.gqa_decode_attention(q, k_deq, v_deq, valid)
+    new_cache = (k_cache, v_cache, k_sc, v_sc) if int8 \
+        else (k_cache, v_cache)
+    return jnp.einsum("bshk,hkd->bsd", out, ap["wo"]), new_cache
+
+
+def _ffn(bp: dict, x, cfg: ModelConfig, rules):
+    h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        if cfg.moe_ragged:
+            y, aux = moe_lib.moe_forward_ragged(bp["moe"], h, cfg.moe,
+                                                rules=rules)
+        else:
+            y, aux = moe_lib.moe_forward(bp["moe"], h, cfg.moe, rules=rules,
+                                         group_size=cfg.moe_group_size)
+        return x + y, aux
+    y = swiglu(h, bp["mlp"]["gate"], bp["mlp"]["up"], bp["mlp"]["down"])
+    y = constrain(y, ("act_batch", "act_seq", "act_embed"), rules)
+    return x + y, jnp.float32(0.0)
+
+
+def block_forward(bp: dict, x, cfg: ModelConfig, positions, *,
+                  rules=None, window=None, collect_cache: bool = False):
+    """Full-sequence block. Returns (x, aux, cache_slice|None)."""
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    cache = None
+    if cfg.family == "ssm":
+        if collect_cache:
+            y, cache = ssm_lib.mamba_forward(
+                bp["mamba"], h, cfg.ssm, cfg.ssm.d_inner(cfg.d_model),
+                return_state=True)
+        else:
+            y = ssm_lib.mamba_forward(bp["mamba"], h, cfg.ssm,
+                                      cfg.ssm.d_inner(cfg.d_model))
+        return x + y, jnp.float32(0.0), (
+            {"ssm": cache} if cache is not None else None)
+    if cfg.uses_mla:
+        y, kv = mla_lib.mla_prefill(bp["mla"], h, cfg.mla, cfg.num_heads,
+                                    positions, cfg.rope_theta)
+    else:
+        y, kv = _attention(bp["attn"], h, cfg, positions, rules=rules,
+                           window=window)
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model // 2
+        if collect_cache:
+            ym, sstate = ssm_lib.mamba_forward(bp["mamba"], h, cfg.ssm,
+                                               d_inner, return_state=True)
+        else:
+            ym = ssm_lib.mamba_forward(bp["mamba"], h, cfg.ssm, d_inner)
+            sstate = None
+        y = (y + ym) * 0.5
+        cache = {"kv": kv, "ssm": sstate} if collect_cache else None
+    elif collect_cache:
+        cache = {"kv": kv}
+    x = x + y
+    x, aux = _ffn(bp, x, cfg, rules)
+    return x, aux, cache
+
+
+def block_decode(bp: dict, x, cfg: ModelConfig, cache, lengths, positions,
+                 *, rules=None, window=None):
+    """One-token block. Returns (x, new_cache_slice)."""
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    new_cache = dict(cache) if isinstance(cache, dict) else {}
+    if cfg.family == "ssm":
+        y, sstate = ssm_lib.mamba_decode(bp["mamba"], h, cfg.ssm,
+                                         cfg.ssm.d_inner(cfg.d_model),
+                                         cache["ssm"])
+        x = x + y
+        return x, {"ssm": sstate}
+    if cfg.uses_mla:
+        y, kv = mla_lib.mla_decode(bp["mla"], h, cfg.mla, cfg.num_heads,
+                                   cache["kv"], lengths, positions,
+                                   cfg.rope_theta)
+    else:
+        y, kv = _attention_decode(bp["attn"], h, cfg, cache["kv"], lengths,
+                                  positions,
+                                  rules=rules, window=window)
+    new_cache["kv"] = kv
+    if cfg.family == "hybrid":
+        ym, sstate = ssm_lib.mamba_decode(bp["mamba"], h, cfg.ssm,
+                                          cfg.ssm.expand * cfg.d_model // 2,
+                                          cache["ssm"])
+        y = (y + ym) * 0.5
+        new_cache["ssm"] = sstate
+    x = x + y
+    x, _ = _ffn(bp, x, cfg, rules)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model entry points
+# ---------------------------------------------------------------------------
+
+_KEEP_F32 = {"A_log", "D", "dt_bias", "router"}
+
+
+def cast_params(tree, dtype):
+    """Cast float weights to the compute dtype (mixed-precision at-use cast);
+    SSM decay/router parameters stay f32 for numerical stability."""
+    def c(path, w):
+        last = path[-1]
+        name = getattr(last, "key", None) or str(last)
+        if name in _KEEP_F32 or not jnp.issubdtype(w.dtype, jnp.floating):
+            return w
+        return w.astype(dtype)
+    return jax.tree_util.tree_map_with_path(c, tree)
+
+
+def _embed_in(params, cfg: ModelConfig, tokens, patches=None,
+              act_dtype=jnp.bfloat16):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(act_dtype)
+    if cfg.family == "vlm" and patches is not None:
+        proj = (patches.astype(act_dtype) @ params["projector"].astype(act_dtype))
+        x = jnp.concatenate([proj, x], axis=1)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x, rules):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return constrain(logits, ("act_batch", "act_seq", "act_vocab"), rules)
+
+
+def forward_train(params, cfg: ModelConfig, tokens, *, patches=None,
+                  rules=None, act_dtype=jnp.bfloat16, remat: bool = True):
+    """tokens: [B, S] -> (logits [B, S', V], aux_loss, hidden [B, S', d])."""
+    params = cast_params(params, act_dtype)
+    x = _embed_in(params, cfg, tokens, patches, act_dtype)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), rules)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def body(carry, bp):
+        h, aux = carry
+        h, a, _ = block_forward(bp, h, cfg, positions, rules=rules,
+                                window=cfg.sliding_window)
+        h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules)
+        return (h, aux + a), None
+
+    f = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) \
+        if (remat and cfg.remat_mode != "none") else body
+    (x, aux), _ = jax.lax.scan(f, (x, jnp.float32(0.0)), params["blocks"])
+    return _logits(params, cfg, x, rules), aux, x
+
+
+def cross_entropy(logits, targets, mask=None):
+    """Gather-free CE: lse(logits) - logits[target] via a one-hot einsum,
+    so a vocab-sharded logits tensor never gets all-gathered and no f32
+    [B,S,V] log-softmax copy materializes."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    oh = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    correct = jnp.einsum("bsv,bsv->bs", logits, oh).astype(jnp.float32)
+    ce = lse - correct
+    if mask is not None:
+        return (ce * mask).sum() / jnp.maximum(mask.sum() * ce.shape[0]
+                                               / mask.shape[0], 1.0)
+    return ce.mean()
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, *, patches=None, rules=None,
+            act_dtype=jnp.bfloat16, mtp_coef: float = 0.3):
+    """Next-token CE (+ MoE aux + MTP). tokens: [B, S]; labels = shifted."""
+    logits, aux, hidden = forward_train(params, cfg, tokens, patches=patches,
+                                        rules=rules, act_dtype=act_dtype)
+    if cfg.family == "vlm":       # drop patch positions
+        logits = logits[:, -tokens.shape[1]:]
+        hidden = hidden[:, -tokens.shape[1]:]
+    ce = cross_entropy(logits[:, :-1], tokens[:, 1:])
+    loss = ce + aux
+    if cfg.mtp_depth:
+        # MTP over the full (padded) sequence so the token count matches the
+        # main stack's sharding/grouping; the tail positions are masked out.
+        mp = params["mtp"]
+        h = rms_norm(hidden, mp["norm_h"], cfg.norm_eps)
+        shifted = jnp.roll(tokens, -1, axis=1)          # t+1 ids (tail junk)
+        e = rms_norm(
+            jnp.take(params["embed"], shifted, axis=0).astype(h.dtype),
+            mp["norm_e"], cfg.norm_eps)
+        hm = jnp.concatenate([h, e], axis=-1) @ mp["proj"].astype(h.dtype)
+        hm = constrain(hm, ("act_batch", "act_seq", "act_embed"), rules)
+        pos = jnp.arange(hm.shape[1])
+        hm, _, _ = block_forward(mp["block"], hm, cfg, pos, rules=rules,
+                                 window=cfg.sliding_window)
+        mtp_logits = _logits(params, cfg, hm, rules)
+        mtp_tgt = jnp.roll(tokens, -2, axis=1)
+        mask = (jnp.arange(tokens.shape[1]) < tokens.shape[1] - 2)
+        mtp_ce = cross_entropy(mtp_logits, mtp_tgt,
+                               mask=mask[None, :].astype(jnp.float32))
+        loss = loss + mtp_coef * mtp_ce
+    return loss, {"ce": ce, "aux": aux}
+
+
+def _fit_cache(leaf, s: int, cache_len: int):
+    """Grow (pad) or ring-pack (roll last W) a stacked cache leaf whose seq
+    dim is axis 2 ([L, B, S, ...])."""
+    if cache_len == s:
+        return leaf
+    if cache_len > s:
+        pad = [(0, 0)] * leaf.ndim
+        pad[2] = (0, cache_len - s)
+        return jnp.pad(leaf, pad)
+    # ring-pack: position p lives at slot p % W (uniform padded length S)
+    last = jax.lax.slice_in_dim(leaf, s - cache_len, s, axis=2)
+    return jnp.roll(last, s % cache_len, axis=2)
+
+
+def prefill(params, cfg: ModelConfig, tokens, lengths, *, patches=None,
+            rules=None, act_dtype=jnp.bfloat16, cache_len=None):
+    """Build the decode cache. tokens: [B, S] (right-padded to S), lengths:
+    [B] valid counts. Returns (next-token logits [B, V], cache pytree).
+    ``cache_len`` sets the decode cache capacity (>=S pads; <S ring-packs,
+    for sliding-window archs)."""
+    params = cast_params(params, act_dtype)
+    x = _embed_in(params, cfg, tokens, patches, act_dtype)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), rules)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+
+    def body(h, bp):
+        h, _, cache = block_forward(bp, h, cfg, positions, rules=rules,
+                                    window=cfg.sliding_window,
+                                    collect_cache=True)
+        h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules)
+        return h, cache
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    if cache_len is not None and cache and "kv" in cache:
+        cache["kv"] = tuple(_fit_cache(c, s, cache_len) for c in cache["kv"])
+    logits = _logits(params, cfg, x, rules)
+    if cfg.family == "vlm":
+        offs = cfg.num_patches
+    else:
+        offs = 0
+    last = jnp.take_along_axis(
+        logits, (offs + lengths - 1)[:, None, None], axis=1)[:, 0]
+    return last, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, positions, *,
+                rules=None, act_dtype=jnp.bfloat16,
+                window: Optional[int] = None):
+    """tokens: [B] new token ids; positions: [B] absolute positions.
+    Returns (logits [B, V], updated cache). ``positions`` are text-relative;
+    VLM caches hold the patch prefix, so the patch offset is added here."""
+    params = cast_params(params, act_dtype)
+    if cfg.family == "vlm":
+        positions = positions + cfg.num_patches
+    x = _embed_in(params, cfg, tokens[:, None], None, act_dtype)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), rules)
+    win = window if window is not None else cfg.sliding_window
+    lengths = positions  # cache holds `positions` entries before this token
+
+    def body(h, xs):
+        bp, cache_l = xs
+        h, new_cache = block_decode(bp, h, cfg, cache_l, lengths, positions,
+                                    rules=rules, window=win)
+        h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules)
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    logits = _logits(params, cfg, x, rules)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (shapes + logical axes for sharding / dry-runs)
+# ---------------------------------------------------------------------------
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int,
+                 dtype=jnp.bfloat16) -> Tuple[Any, Any]:
+    """Returns (ShapeDtypeStruct pytree, logical-axes pytree) of the decode
+    cache. ``seq`` is the cache capacity (window size for SWA archs)."""
+    l = cfg.num_layers
+    entry_shapes: Dict[str, Any] = {}
+    entry_axes: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        if cfg.uses_mla:
+            m = cfg.mla
+            kv_shapes = (
+                jax.ShapeDtypeStruct((l, batch, seq, m.kv_lora_rank), dtype),
+                jax.ShapeDtypeStruct((l, batch, seq, m.qk_rope_dim), dtype))
+            kv_axes = (("layers", "cache_batch", "kv_seq", None),
+                       ("layers", "cache_batch", "kv_seq", None))
+        elif cfg.cache_int8:
+            kv_shape = (l, batch, seq, cfg.num_kv_heads, cfg.head_dim)
+            sc_shape = (l, batch, seq, cfg.num_kv_heads)
+            kv_shapes = (jax.ShapeDtypeStruct(kv_shape, jnp.int8),
+                         jax.ShapeDtypeStruct(kv_shape, jnp.int8),
+                         jax.ShapeDtypeStruct(sc_shape, jnp.bfloat16),
+                         jax.ShapeDtypeStruct(sc_shape, jnp.bfloat16))
+            ax = ("layers", "cache_batch", "kv_seq", "cache_heads", None)
+            ax_sc = ("layers", "cache_batch", "kv_seq", "cache_heads")
+            kv_axes = (ax, ax, ax_sc, ax_sc)
+        else:
+            kv_shape = (l, batch, seq, cfg.num_kv_heads, cfg.head_dim)
+            kv_shapes = (jax.ShapeDtypeStruct(kv_shape, dtype),
+                         jax.ShapeDtypeStruct(kv_shape, dtype))
+            ax = ("layers", "cache_batch", "kv_seq", "cache_heads", None)
+            kv_axes = (ax, ax)
+        entry_shapes["kv"] = kv_shapes
+        entry_axes["kv"] = kv_axes
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner = (cfg.ssm.d_inner(cfg.d_model) if cfg.family == "ssm"
+                   else cfg.ssm.expand * cfg.d_model // 2)
+        shapes, axes = ssm_lib.mamba_state_spec(cfg, batch, d_inner)
+        entry_shapes["ssm"] = tuple(
+            jax.ShapeDtypeStruct((l,) + s, jnp.float32) for s in shapes)
+        entry_axes["ssm"] = tuple(("layers",) + a for a in axes)
+    return entry_shapes, entry_axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    shapes, _ = cache_struct(cfg, batch, seq, dtype)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)

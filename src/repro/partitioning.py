@@ -1,0 +1,138 @@
+"""Logical-axis partitioning (MaxText-style rules).
+
+Every parameter / activation / cache leaf is annotated with a tuple of
+*logical* axis names; a rule table maps logical axes onto mesh axes per
+workload mode.  ``make_sharding`` drops a mapping whenever the dimension is
+not divisible by the mapped mesh extent (e.g. qwen's 40 heads on a 16-way
+model axis) — replication instead of GSPMD padding, recorded in the roofline
+notes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule tables: logical axis -> mesh axis (or tuple of mesh axes, or None)
+# ---------------------------------------------------------------------------
+
+def sharding_rules(mode: str, *, multi_pod: bool = False,
+                   fsdp: bool = False,
+                   expert_2d: bool = False,
+                   overrides: Optional[Dict[str, Any]] = None
+                   ) -> Dict[str, Any]:
+    """Logical->mesh mapping.
+
+    mode: "train" | "prefill" | "decode"
+    fsdp: additionally shard large weight matrices over the data axis
+          (ZeRO-3 style; XLA inserts all-gather on use / reduce-scatter on
+          gradients).
+    expert_2d: shard the expert axis over (data, model) — used when
+          num_experts == data*model (deepseek-v3: 256 experts on a 16x16 pod).
+    """
+    batch_axes: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    fsdp_axes = (("pod", "data") if multi_pod else "data") if fsdp else None
+    rules: Dict[str, Any] = {
+        # --- weights ---
+        "embed": fsdp_axes,                  # d_model dim of weights
+        "embed_out": None,
+        "q_heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": ("data", "model") if expert_2d else "model",
+        "expert_mlp": None,
+        "lora": None,
+        "ssm_inner": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "conv": None,
+        "layers": None,
+        # --- activations ---
+        "act_batch": batch_axes,
+        # sequence parallelism: full-sequence activations shard their seq
+        # dim over the model axis in train/prefill (per-layer checkpoints
+        # of a 1M-token global batch cannot be model-replicated).
+        "act_seq": "model" if mode in ("train", "prefill") else None,
+        "act_embed": None,
+        "act_heads": "model",
+        "act_mlp": "model",
+        "act_vocab": "model",
+        # --- caches (decode): context parallelism over the model axis ---
+        "kv_seq": "model" if mode in ("decode", "prefill") else None,
+        "cache_batch": batch_axes,
+        "cache_heads": None,
+        # --- MoE dispatch groups follow token/batch sharding ---
+        "expert_groups": batch_axes,
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def resolve_spec(axes: Sequence[Optional[str]], shape: Sequence[int],
+                 rules: Dict[str, Any], mesh: Mesh) -> P:
+    """Map logical axes to a PartitionSpec, dropping non-divisible axes."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        mapped = rules.get(ax) if ax is not None else None
+        if mapped is None:
+            parts.append(None)
+            continue
+        mesh_axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        mesh_axes = tuple(m for m in mesh_axes
+                          if m in mesh_shape and m not in used)
+        extent = int(np.prod([mesh_shape[m] for m in mesh_axes])) if mesh_axes else 1
+        if not mesh_axes or dim % extent != 0:
+            # fall back: try a prefix of the mesh axes that divides
+            while mesh_axes and dim % int(np.prod([mesh_shape[m] for m in mesh_axes])) != 0:
+                mesh_axes = mesh_axes[:-1]
+            if not mesh_axes:
+                parts.append(None)
+                continue
+        used.update(mesh_axes)
+        parts.append(mesh_axes[0] if len(mesh_axes) == 1 else tuple(mesh_axes))
+    # trim trailing Nones
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_shardings(axes_tree: Any, shape_tree: Any, rules: Dict[str, Any],
+                   mesh: Mesh) -> Any:
+    """Build a NamedSharding pytree from (logical-axes, shapes) pytrees."""
+    def build(axes, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else shaped
+        return NamedSharding(mesh, resolve_spec(axes, shape, rules, mesh))
+    return jax.tree.map(build, axes_tree, shape_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]],
+              rules: Optional[Dict[str, Any]]) -> jax.Array:
+    """with_sharding_constraint by logical axes.
+
+    ``rules`` must carry the concrete mesh under key ``"_mesh"`` (set by
+    :func:`with_mesh_rules`); without it this is a no-op so model code runs
+    unchanged on a single CPU device (smoke tests).
+    """
+    if rules is None:
+        return x
+    mesh = rules.get("_mesh")
+    if mesh is None:
+        return x
+    spec = resolve_spec(axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def with_mesh_rules(rules: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    out = dict(rules)
+    out["_mesh"] = mesh
+    return out

@@ -1,0 +1,204 @@
+"""Real JAX serving engines (run the actual model; CPU-sized configs).
+
+- :class:`BatchEngine` — the paper's §II-D padded batch procedure: pad all
+  requests to the batch length, prefill, then decode until *every* request
+  has finished (early finishers keep generating invalid tokens = request
+  waiting).  Reports measured WMA so tests can check Eqs. (2)-(4) against
+  reality.
+- :class:`ContinuousEngine` — conservative continuous batching (CCB):
+  slot-based active set; a joining request's prefill pauses the instance.
+
+Generation is *length-scripted replay*: logits are computed by the real
+model (compute is real), but EOS fires at the request's ground-truth
+generation length — standard for serving-system benchmarking and required
+for controlled comparisons (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.types import Batch, Request
+from repro.core.wma import batch_wma
+from repro.models import model as M
+from repro.workload.tokenizer import encode
+
+
+def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return n
+
+
+@dataclasses.dataclass
+class ServeResult:
+    iterations: int
+    batch_size: int
+    batch_length: int
+    wall_time: float
+    wma: int
+    total_tokens: int
+    valid_tokens: int
+    generated: Dict[int, List[int]]   # req_id -> generated token ids
+
+
+class BatchEngine:
+    """Padded batch serving with the real model (vanilla / Magnus runtime)."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
+                 max_gen: int = 64, dtype=jnp.float32):
+        self.cfg = cfg
+        self.max_gen = max_gen
+        self.dtype = dtype
+        self.params = params if params is not None else M.init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(
+            functools.partial(M.prefill, cfg=cfg, act_dtype=dtype),
+            static_argnames=("cache_len",))
+        self._decode = jax.jit(
+            functools.partial(M.decode_step, cfg=cfg, act_dtype=dtype))
+
+    def _tokens(self, reqs: List[Request], pad_to: int) -> np.ndarray:
+        out = np.zeros((len(reqs), pad_to), np.int64)
+        for i, r in enumerate(reqs):
+            ids = encode(f"{r.instruction} {r.user_input}",
+                         self.cfg.vocab_size)[:pad_to]
+            out[i, :len(ids)] = ids
+        return out
+
+    def serve_batch(self, batch: Batch) -> ServeResult:
+        reqs = batch.requests
+        t0 = time.perf_counter()
+        bl = _bucket(max(r.length for r in reqs))
+        lengths = np.array([min(r.length, bl) for r in reqs], np.int32)
+        gen_targets = np.array([min(r.gen_length, self.max_gen)
+                                for r in reqs], np.int32)
+        bg = int(gen_targets.max())
+        cache_len = _bucket(bl + bg + (self.cfg.num_patches
+                                       if self.cfg.family == "vlm" else 0))
+        tokens = self._tokens(reqs, bl)
+        batch_in = {"tokens": jnp.asarray(tokens),
+                    "lengths": jnp.asarray(lengths)}
+        if self.cfg.family == "vlm":
+            batch_in["patches"] = jnp.zeros(
+                (len(reqs), self.cfg.num_patches, self.cfg.d_model), self.dtype)
+        if self.cfg.family == "audio":
+            batch_in["frames"] = jnp.zeros(
+                (len(reqs), self.cfg.encoder_seq, self.cfg.d_model), self.dtype)
+        logits, cache = self._prefill(self.params, batch=batch_in,
+                                      cache_len=cache_len)
+        logits = logits[:, :self.cfg.vocab_size]   # drop sharding-pad ids
+        positions = jnp.asarray(lengths)
+        generated: Dict[int, List[int]] = {r.req_id: [] for r in reqs}
+        # decode until the slowest request finishes (request waiting!)
+        for it in range(bg):
+            next_tok = jnp.argmax(logits[:, :self.cfg.vocab_size],
+                                  axis=-1).astype(jnp.int32)
+            for i, r in enumerate(reqs):
+                if it < gen_targets[i]:
+                    generated[r.req_id].append(int(next_tok[i]))
+            logits, cache = self._decode(
+                self.params, cache=cache,
+                batch={"tokens": next_tok, "positions": positions})
+            positions = positions + 1
+        wall = time.perf_counter() - t0
+        wma = batch_wma([int(l) for l in lengths],
+                        [int(g) for g in gen_targets])
+        return ServeResult(
+            iterations=int(bg), batch_size=len(reqs), batch_length=bl,
+            wall_time=wall, wma=wma,
+            total_tokens=len(reqs) * int(bg),
+            valid_tokens=int(gen_targets.sum()), generated=generated)
+
+
+class ContinuousEngine:
+    """Conservative continuous batching with the real model: fixed slots;
+    joins prefill alone (single-request batch) while decoding pauses."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
+                 slots: int = 4, max_len: int = 256, max_gen: int = 64,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.max_gen = max_gen
+        self.dtype = dtype
+        self.params = params if params is not None else M.init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(
+            functools.partial(M.prefill, cfg=cfg, act_dtype=dtype),
+            static_argnames=("cache_len",))
+        self._decode = jax.jit(
+            functools.partial(M.decode_step, cfg=cfg, act_dtype=dtype))
+        self.cache = M.init_cache(cfg, slots, max_len + max_gen,
+                                  dtype=jnp.float32 if dtype == jnp.float32
+                                  else jnp.bfloat16)
+        self.active: List[Optional[dict]] = [None] * slots
+        self.logits = jnp.zeros((slots, cfg.padded_vocab), dtype)
+        self.positions = np.zeros(slots, np.int32)
+
+    def _merge_cache_slot(self, slot: int, single_cache) -> None:
+        """Copy a single-request prefill cache into slot ``slot``."""
+        def merge(dst, src):
+            return dst.at[:, slot:slot + 1].set(
+                src[:, :, :dst.shape[2]].astype(dst.dtype)
+                if src.shape[2] >= dst.shape[2] else
+                jnp.pad(src, [(0, 0), (0, 0), (0, dst.shape[2] - src.shape[2])]
+                        + [(0, 0)] * (src.ndim - 3)).astype(dst.dtype))
+        self.cache = jax.tree.map(merge, self.cache, single_cache)
+
+    def join(self, req: Request) -> int:
+        slot = self.active.index(None)
+        ids = encode(f"{req.instruction} {req.user_input}",
+                     self.cfg.vocab_size)[:self.max_len]
+        pad = _bucket(len(ids))
+        tokens = np.zeros((1, pad), np.int64)
+        tokens[0, :len(ids)] = ids
+        batch_in = {"tokens": jnp.asarray(tokens),
+                    "lengths": jnp.asarray([len(ids)], np.int32)}
+        if self.cfg.family == "vlm":
+            batch_in["patches"] = jnp.zeros(
+                (1, self.cfg.num_patches, self.cfg.d_model), self.dtype)
+        if self.cfg.family == "audio":
+            batch_in["frames"] = jnp.zeros(
+                (1, self.cfg.encoder_seq, self.cfg.d_model), self.dtype)
+        logits, single_cache = self._prefill(
+            self.params, batch=batch_in,
+            cache_len=self.max_len + self.max_gen)
+        self._merge_cache_slot(slot, single_cache)
+        self.logits = self.logits.at[slot].set(logits[0].astype(self.dtype))
+        self.positions[slot] = len(ids)
+        self.active[slot] = {"req": req, "generated": [],
+                             "target": min(req.gen_length, self.max_gen)}
+        return slot
+
+    def step(self) -> List[Request]:
+        """One decode iteration over all active slots; returns finished."""
+        if not any(self.active):
+            return []
+        next_tok = jnp.argmax(self.logits[:, :self.cfg.vocab_size],
+                              axis=-1).astype(jnp.int32)
+        for slot, a in enumerate(self.active):
+            if a is not None:
+                a["generated"].append(int(next_tok[slot]))
+        self.logits, self.cache = self._decode(
+            self.params, cache=self.cache,
+            batch={"tokens": next_tok,
+                   "positions": jnp.asarray(self.positions)})
+        self.logits = self.logits.astype(self.dtype)
+        self.positions = self.positions + 1
+        finished = []
+        for slot, a in enumerate(self.active):
+            if a is not None and len(a["generated"]) >= a["target"]:
+                finished.append(a["req"])
+                self.active[slot] = None
+                self.positions[slot] = 0
+        return finished

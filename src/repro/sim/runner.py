@@ -1,0 +1,78 @@
+"""Run a (strategy x workload) simulation — the paper's experiment driver.
+
+Strategies: vs | vsq | ccb | glp | abp | magnus   (Figs 10-13).
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.estimator import ServingTimeEstimator
+from repro.core.magnus import MagnusConfig, MagnusService
+from repro.core.predictor import GenerationLengthPredictor
+from repro.core.types import Request
+from repro.core.wma import MemoryModel
+from repro.serving.cost_model import CostModel, HardwareSpec, TPU_V5E
+from repro.sim.events import CCBSimulator, ClusterSimulator, Metrics, SimConfig
+from repro.workload.apps import make_dataset
+
+
+def _estimator_bootstrap(cost: CostModel, memory: MemoryModel,
+                         seed: int = 0) -> ServingTimeEstimator:
+    """Train the serving-time KNN on synthetic profiled batches (the paper
+    trains on 2,500 held-out requests' serving logs)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    rows = []
+    for _ in range(400):
+        beta = int(rng.integers(1, 64))
+        bl = int(rng.integers(8, memory.max_len))
+        bg = int(rng.integers(1, memory.max_gen))
+        rows.append((beta, bl, bg, cost.batch_serving_time(beta, bl, bg)))
+    return ServingTimeEstimator().fit(rows)
+
+
+def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
+                 hw: HardwareSpec = TPU_V5E, n_instances: int = 7,
+                 wma_threshold: float = 50_000.0,
+                 fixed_batch_size: Optional[int] = None,
+                 predictor: Optional[GenerationLengthPredictor] = None,
+                 train_requests: Optional[List[Request]] = None,
+                 kv_dtype_bytes: int = 2,
+                 seed: int = 0) -> Metrics:
+    workload = copy.deepcopy(workload)   # sims mutate finish times
+    quant = strategy == "vsq"
+    # int4 weights free memory => larger Eq.-(1) beta (paper: 7 -> 10)
+    memory = MemoryModel(cfg, hbm_bytes=hw.hbm_bytes * hw.chips,
+                         dtype_bytes=kv_dtype_bytes,
+                         param_dtype_bytes=0.5 if quant else 2)
+    if memory.theta <= 0:
+        raise ValueError(
+            f"{cfg.name} params do not fit a {hw.chips}-chip {hw.name} "
+            f"instance; raise HardwareSpec.chips")
+    cost = CostModel(cfg, hw, quantized=quant, kv_dtype_bytes=kv_dtype_bytes)
+    if strategy == "ccb":
+        limit = fixed_batch_size or MemoryModel(
+            cfg, hbm_bytes=hw.hbm_bytes * hw.chips,
+            dtype_bytes=kv_dtype_bytes).vanilla_batch_size()
+        return CCBSimulator(cost, n_instances=n_instances,
+                            parallel_limit=limit).run(workload)
+    svc_cfg = MagnusConfig(strategy=strategy, wma_threshold=wma_threshold,
+                           fixed_batch_size=fixed_batch_size)
+    if predictor is None and strategy in ("glp", "abp", "magnus"):
+        predictor = GenerationLengthPredictor(seed=seed).fit(
+            train_requests or make_dataset(150, seed=seed + 1))
+    svc = MagnusService(memory, svc_cfg, predictor=predictor,
+                        estimator=_estimator_bootstrap(cost, memory, seed))
+    sim_cfg = SimConfig(n_instances=n_instances,
+                        gen_scale=1.15 if quant else 1.0)
+    sim = ClusterSimulator(svc, cost, sim_cfg)
+    return sim.run(workload)
+
+
+def run_all(workload: List[Request], cfg: ModelConfig,
+            strategies=("vs", "vsq", "ccb", "glp", "abp", "magnus"),
+            **kw) -> Dict[str, Metrics]:
+    return {s: run_strategy(s, workload, cfg, **kw) for s in strategies}

@@ -1,0 +1,37 @@
+"""Flat-npz checkpointing for arbitrary pytrees (params + opt state)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in flat}
+
+
+def save(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(path, __step__=np.int64(step), **arrays)
+
+
+def restore(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        step = int(data["__step__"])
+        flat = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for path_k, leaf in flat[0]:
+            key = jax.tree_util.keystr(path_k)
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves)
+    return tree, step

@@ -1,0 +1,80 @@
+"""AdamW with global-norm clipping and linear-warmup/cosine schedule —
+implemented in-repo (no optax offline)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: Any = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init(cfg: AdamWConfig, params: Any) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(z, params),
+                      nu=jax.tree.map(z, params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads: Any, state: AdamWState, params: Any
+           ) -> Tuple[Any, AdamWState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu_n = cfg.beta1 * mu.astype(jnp.float32) + (1 - cfg.beta1) * g
+        nu_n = cfg.beta2 * nu.astype(jnp.float32) + (1 - cfg.beta2) * g * g
+        upd_ = (mu_n / b1c) / (jnp.sqrt(nu_n / b2c) + cfg.eps)
+        if p.ndim >= 2:                      # decoupled decay on matrices
+            upd_ = upd_ + cfg.weight_decay * p.astype(jnp.float32)
+        p_n = p.astype(jnp.float32) - lr * upd_
+        return (p_n.astype(p.dtype), mu_n.astype(mu.dtype),
+                nu_n.astype(nu.dtype))
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    params_n = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+    mu_n = jax.tree.map(lambda t: t[1], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    nu_n = jax.tree.map(lambda t: t[2], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    return params_n, AdamWState(step, mu_n, nu_n), {"grad_norm": gnorm,
+                                                    "lr": lr}

@@ -1,0 +1,77 @@
+"""Training loop: jit'd AdamW train_step (the same function the multi-pod
+dry-run lowers at production scale), metrics, periodic checkpointing."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.train.data import DataConfig, batches
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.AdamWConfig,
+                    rules=None, act_dtype=jnp.bfloat16):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+    This exact callable is what launch/dryrun.py lowers on the production
+    mesh (ShapeDtypeStruct inputs, sharded via in_shardings)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = M.loss_fn(params, cfg, batch, rules=rules,
+                                  act_dtype=act_dtype)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_m = opt_lib.update(opt_cfg, grads, opt_state,
+                                                  params)
+        out = {"loss": loss, **metrics, **opt_m}
+        return params, opt_state, out
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0            # 0 = only at the end
+    ckpt_path: Optional[str] = None
+    seed: int = 0
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, dc: Optional[DataConfig] = None,
+          opt_cfg: Optional[opt_lib.AdamWConfig] = None,
+          act_dtype=jnp.float32) -> Dict[str, Any]:
+    dc = dc or DataConfig()
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig(total_steps=tc.steps)
+    params = M.init_params(cfg, jax.random.PRNGKey(tc.seed))
+    opt_state = opt_lib.init(opt_cfg, params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, act_dtype=act_dtype),
+                      donate_argnums=(0, 1))
+    it = batches(cfg, dc)
+    history = []
+    t0 = time.perf_counter()
+    for step in range(1, tc.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if step % tc.log_every == 0 or step == tc.steps:
+            row = {k: float(v) for k, v in m.items()}
+            row["step"] = step
+            row["wall"] = time.perf_counter() - t0
+            history.append(row)
+            print(f"step {step:5d} loss {row['loss']:.4f} "
+                  f"grad_norm {row['grad_norm']:.3f} lr {row['lr']:.2e}")
+        if (tc.ckpt_every and tc.ckpt_path
+                and step % tc.ckpt_every == 0):
+            ckpt_lib.save(tc.ckpt_path, {"params": params}, step)
+    if tc.ckpt_path:
+        ckpt_lib.save(tc.ckpt_path, {"params": params}, tc.steps)
+    return {"params": params, "opt_state": opt_state, "history": history}

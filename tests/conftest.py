@@ -1,0 +1,13 @@
+import os
+
+# smoke tests and benches must see the single real CPU device; ONLY
+# launch/dryrun.py forces 512 host devices (see the multi-pod brief).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned family
+(2 layers, d_model<=512, <=4 experts) runs one forward/train step and one
+prefill+decode step on CPU; output shapes asserted, no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            KEY, (b, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            KEY, (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    params = M.init_params(cfg, KEY)
+    loss, metrics = M.loss_fn(params, cfg, _batch(cfg))
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), f"{arch}: NaN loss"
+    grads = jax.grad(lambda p: M.loss_fn(p, cfg, _batch(cfg))[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert gn > 0 and not jnp.isnan(gn), f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, KEY)
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    batch["lengths"] = jnp.array([s, s - 5])
+    cache_len = s + 8 + (cfg.num_patches if cfg.family == "vlm" else 0)
+    last, cache = M.prefill(params, cfg, batch, cache_len=cache_len)
+    assert last.shape == (b, cfg.padded_vocab)
+    logits, cache = M.decode_step(
+        params, cfg, cache,
+        {"tokens": jnp.array([3, 4]), "positions": jnp.array([s, s - 5])})
+    assert logits.shape == (b, cfg.padded_vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "qwen2.5-14b", "mamba2-780m",
+                                  "hymba-1.5b", "deepseek-v3-671b",
+                                  "olmoe-1b-7b", "whisper-large-v3",
+                                  "internvl2-26b"])
+def test_decode_matches_forward(arch):
+    """The cache-correctness invariant: decode at position S equals the full
+    forward over S+1 tokens (per family: KV, MLA latent, SSM state)."""
+    from repro.models import encdec as E
+    from repro.models import transformer as T
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, KEY)
+    b, s = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0,
+                              cfg.vocab_size)
+    batch = _batch(cfg, b, s)
+    batch["tokens"] = toks[:, :s]
+    batch["lengths"] = jnp.array([s, s])
+    if cfg.family == "audio":
+        enc = E.encode(params, cfg, batch["frames"], act_dtype=jnp.float32)
+        full_logits, _ = E._decoder(params, cfg, toks, enc, rules=None,
+                                    act_dtype=jnp.float32)
+        full = full_logits[:, s]
+    else:
+        full_logits, _, _ = T.forward_train(
+            params, cfg, toks, patches=batch.get("patches"),
+            act_dtype=jnp.float32, remat=False)
+        full = full_logits[:, -1]
+    cache_len = s + 4 + (cfg.num_patches if cfg.family == "vlm" else 0)
+    _, cache = M.prefill(params, cfg, batch, cache_len=cache_len,
+                         act_dtype=jnp.float32)
+    dec, _ = M.decode_step(params, cfg, cache,
+                           {"tokens": toks[:, s],
+                            "positions": jnp.array([s, s])},
+                           act_dtype=jnp.float32)
+    err = float(jnp.max(jnp.abs(full.astype(jnp.float32)
+                                - dec.astype(jnp.float32))))
+    assert err < 2e-3, f"{arch}: decode/forward mismatch {err}"
+
+
+def test_paper_model_config():
+    """The paper's own testbed model (chatglm-6b) is a selectable config."""
+    cfg = get_config("chatglm-6b")
+    assert cfg.num_layers == 28 and cfg.d_model == 4096
+    assert 5.5e9 < cfg.param_count() < 7.5e9     # "6B"
+    r = cfg.reduced()
+    params = M.init_params(r, KEY)
+    loss, _ = M.loss_fn(params, r, _batch(r))
+    assert not bool(jnp.isnan(loss))

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 5e-2 if dtype == jnp.bfloat16 else 2e-4
+
+
+@pytest.mark.parametrize("s,hq,hkv,d", [(128, 4, 4, 64), (256, 4, 2, 64),
+                                        (192, 6, 2, 32), (256, 8, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mode", ["causal", "window", "full"])
+def test_flash_attention(s, hq, hkv, d, dtype, mode):
+    b = 2
+    q = jax.random.normal(KEY, (b, s, hq, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d), dtype)
+    kw = {"causal": mode != "full",
+          "window": 64 if mode == "window" else None}
+    out = flash_attention_kernel(q, k, v, block_q=64, block_k=64,
+                                 interpret=True, **kw)
+    ref = flash_attention_ref(q, k, v, **kw)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+    assert float(err) < _tol(dtype), (mode, float(err))
+
+
+@pytest.mark.parametrize("s,hq,hkv,d", [(256, 4, 4, 64), (640, 8, 2, 64),
+                                        (512, 4, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(s, hq, hkv, d, dtype):
+    b = 3
+    q = jax.random.normal(KEY, (b, hq, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d), dtype)
+    lengths = jnp.array([s, 13, s // 2])
+    out = decode_attention_kernel(q, k, v, lengths, block_k=128,
+                                  interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+    assert float(err) < _tol(dtype), float(err)
+
+
+def test_decode_attention_masks_waiting_tokens():
+    """Invalid (waiting/pad) cache slots must not leak into the output —
+    the kernel-level statement of the paper's WMA masking."""
+    b, s, h, d = 2, 128, 2, 32
+    q = jax.random.normal(KEY, (b, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, h, d))
+    lengths = jnp.array([40, 64])
+    out1 = decode_attention_kernel(q, k, v, lengths, block_k=32,
+                                   interpret=True)
+    # poison the invalid region; result must not change
+    k2 = k.at[0, 40:].set(1e4)
+    v2 = v.at[0, 40:].set(-1e4)
+    out2 = decode_attention_kernel(q, k2, v2, lengths, block_k=32,
+                                   interpret=True)
+    assert jnp.allclose(out1, out2, atol=1e-5)
+
+
+@pytest.mark.parametrize("s,h,p,n,chunk", [(128, 2, 32, 16, 32),
+                                           (256, 3, 32, 16, 64),
+                                           (192, 2, 64, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_scan(s, h, p, n, chunk, dtype):
+    b = 2
+    x = jax.random.normal(KEY, (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (h,)))
+    bb = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, n), dtype)
+    cc = jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, n), dtype)
+    y, st = ssd_scan_kernel(x, dt, a, bb, cc, chunk=chunk, interpret=True)
+    yr, str_ = ssd_scan_ref(x, dt, a, bb, cc)
+    assert float(jnp.max(jnp.abs(y - yr))) < 5e-3
+    assert float(jnp.max(jnp.abs(st - str_))) < 5e-3
+
+
+def test_jnp_chunked_ssd_matches_recurrence():
+    """The model's production jnp SSD path against the naive recurrence."""
+    from repro.models.ssm import ssd_chunked
+    b, s, h, p, n = 2, 256, 3, 32, 16
+    x = jax.random.normal(KEY, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 1),
+                                           (b, s, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 2), (h,)))
+    bb = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, n))
+    cc = jax.random.normal(jax.random.fold_in(KEY, 4), (b, s, n))
+    y, st = ssd_chunked(x, dt, a, bb, cc, chunk=64)
+    yr, str_ = ssd_scan_ref(x, dt, a, bb, cc)
+    assert float(jnp.max(jnp.abs(y - yr))) < 5e-3
+    assert float(jnp.max(jnp.abs(st - str_))) < 5e-3
+
+
+def test_blockwise_attention_matches_exact():
+    from repro.models.attention import gqa_prefill_attention
+    b, s, hq, hkv, d = 2, 256, 4, 2, 64
+    q = jax.random.normal(KEY, (b, s, hq, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d))
+    out = gqa_prefill_attention(q, k, v, causal=True, chunk=64)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-4
+
+
+@pytest.mark.parametrize("s,hq,hkv,d", [(256, 4, 2, 32), (320, 8, 2, 64)])
+def test_decode_attention_int8(s, hq, hkv, d):
+    """int8-cache kernel variant vs the fp oracle (quantization tolerance)."""
+    from repro.kernels.decode_attention.kernel import (
+        decode_attention_int8_kernel)
+    b = 2
+    q = jax.random.normal(KEY, (b, hq, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d))
+    lengths = jnp.array([s, s // 3])
+
+    def q8(t):
+        sc = jnp.maximum(jnp.max(jnp.abs(t), -1) / 127., 1e-8)
+        return jnp.round(t / sc[..., None]).astype(jnp.int8), sc
+
+    kq, ks = q8(k)
+    vq, vs = q8(v)
+    out = decode_attention_int8_kernel(q, kq, vq, ks, vs, lengths,
+                                       block_k=64, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    assert float(jnp.max(jnp.abs(out - ref))) < 0.05

@@ -1,0 +1,81 @@
+"""Paged KV-cache block manager: allocator invariants (hypothesis) and the
+batcher integration (per-request block accounting beats the padded
+Eq.-(5) reservation)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core.batcher import AdaptiveBatcher, BatcherConfig
+from repro.core.types import Request
+from repro.core.wma import MemoryModel
+from repro.serving.paged_cache import BlockAllocator, make_paged_memory
+
+
+def _req(length, gen):
+    r = Request(app="x", task="x", instruction="i", user_input="u",
+                length=length, user_input_length=length, gen_length=gen)
+    r.predicted_gen_length = gen
+    return r
+
+
+def test_allocator_basic():
+    a = BlockAllocator(num_blocks=10, block_tokens=16)
+    t = a.allocate(1, 40)                 # ceil(40/16)=3 blocks
+    assert len(t) == 3 and a.used_blocks == 3
+    a.allocate(1, 50)                     # grow to 4
+    assert len(a.tables[1]) == 4
+    a.free_seq(1)
+    assert a.used_blocks == 0
+
+
+def test_allocator_oom():
+    a = BlockAllocator(num_blocks=2, block_tokens=16)
+    a.allocate(1, 32)
+    with pytest.raises(MemoryError):
+        a.allocate(2, 16)
+
+
+@given(st.lists(st.tuples(st.integers(1, 9), st.integers(1, 400)),
+                min_size=1, max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_allocator_conservation(ops):
+    """free + used == total, always; tables never share blocks."""
+    a = BlockAllocator(num_blocks=64, block_tokens=16)
+    for seq, tokens in ops:
+        if a.can_allocate(seq, tokens):
+            a.allocate(seq, tokens)
+        else:
+            a.free_seq(seq)
+    assert len(a.free) + sum(len(t) for t in a.tables.values()) == 64
+    all_blocks = [b for t in a.tables.values() for b in t] + a.free
+    assert len(set(all_blocks)) == len(all_blocks)
+
+
+def test_paged_memory_packs_larger_batches():
+    """Per-request block accounting admits more requests than the padded
+    Eq.-(5) reservation at the same Θ (the PagedAttention win, grafted
+    onto the Magnus batcher)."""
+    cfg = get_config("chatglm-6b")
+    base = MemoryModel(cfg, hbm_bytes=32 * 2 ** 30, dtype_bytes=4)
+    paged = make_paged_memory(cfg, hbm_bytes=32 * 2 ** 30, dtype_bytes=4)
+    # mixed batch: one long request forces padded reservation for everyone
+    reqs = [_req(1000, 1000)] + [_req(20, 20) for _ in range(63)]
+    b_pad = AdaptiveBatcher(base, BatcherConfig(wma_threshold=1e18))
+    b_pag = AdaptiveBatcher(paged, BatcherConfig(wma_threshold=1e18))
+    for r in reqs:
+        b_pad.insert(_req(r.length, r.gen_length), 0.0)
+        b_pag.insert(_req(r.length, r.gen_length), 0.0)
+    # identical-length requests group into one batch either way, but the
+    # paged model's footprint for the mixed batch is far smaller:
+    mixed = b_pad.queue[0]
+    assert paged.mem_of(mixed) < base.mem_of(mixed)
+    frag = 1 - paged.mem_of(mixed) / base.mem_of(mixed)
+    assert frag > 0.0
+
+
+def test_fragmentation_metric():
+    a = BlockAllocator(num_blocks=100, block_tokens=16)
+    a.allocate(1, 17)   # 2 blocks for 17 tokens
+    assert a.utilization(17) == pytest.approx(17 / 32)

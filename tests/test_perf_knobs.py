@@ -1,0 +1,109 @@
+"""§Perf lever correctness: int8 KV cache numerics and head-padding
+function preservation (zero-extended wq / wo rows)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_int8_kv_cache_close_to_fp():
+    cfg = get_config("qwen2.5-14b").reduced()
+    cfg8 = dataclasses.replace(cfg, cache_int8=True)
+    params = M.init_params(cfg, KEY)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :s], "lengths": jnp.array([s, s])}
+    _, cache = M.prefill(params, cfg, batch, cache_len=s + 4,
+                         act_dtype=jnp.float32)
+    ref, _ = M.decode_step(params, cfg, cache,
+                           {"tokens": toks[:, s],
+                            "positions": jnp.array([s, s])},
+                           act_dtype=jnp.float32)
+    k, v = cache["kv"]
+
+    def q8(t):
+        sc = jnp.maximum(jnp.max(jnp.abs(t.astype(jnp.float32)), -1) / 127.,
+                         1e-8)
+        return (jnp.round(t.astype(jnp.float32) / sc[..., None]
+                          ).astype(jnp.int8), sc.astype(jnp.bfloat16))
+
+    kq, ks = q8(k)
+    vq, vs = q8(v)
+    out, _ = M.decode_step(params, cfg8, {"kv": (kq, vq, ks, vs)},
+                           {"tokens": toks[:, s],
+                            "positions": jnp.array([s, s])},
+                           act_dtype=jnp.float32)
+    rel = float(jnp.max(jnp.abs(out - ref))) / float(jnp.abs(ref).max())
+    assert rel < 0.05, rel
+
+
+def test_pad_heads_function_preserving():
+    """Zero-padding q-heads (with zero wo rows) leaves outputs unchanged."""
+    cfg = get_config("qwen2.5-14b").reduced()        # 4 heads, kv 1
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pad_to = hq + hkv                                # pad by one kv group
+    cfgp = dataclasses.replace(cfg, pad_heads_to=pad_to)
+    params = M.init_params(cfg, KEY)
+    paramsp = M.init_params(cfgp, KEY)
+
+    # build padded weights from the originals: original heads grouped per
+    # kv head, pad heads appended per group with ZERO wq/wo (and zero bq)
+    g = hq // hkv
+    gp = pad_to // hkv
+
+    def pack_q(w):   # [d, hq, hd] -> [d, pad_to, hd]
+        w = w.reshape(w.shape[0], hkv, g, hd)
+        z = jnp.zeros((w.shape[0], hkv, gp - g, hd), w.dtype)
+        return jnp.concatenate([w, z], axis=2).reshape(w.shape[0], pad_to, hd)
+
+    def pack_o(w):   # [hq, hd, d] -> [pad_to, hd, d]
+        w = w.reshape(hkv, g, hd, w.shape[-1])
+        z = jnp.zeros((hkv, gp - g, hd, w.shape[-1]), w.dtype)
+        return jnp.concatenate([w, z], axis=1).reshape(pad_to, hd, w.shape[-1])
+
+    import copy
+    pp = jax.tree.map(lambda x: x, paramsp)
+    pp["blocks"] = dict(params["blocks"])
+    attn = dict(params["blocks"]["attn"])
+    attn["wq"] = jax.vmap(pack_q)(params["blocks"]["attn"]["wq"])
+    attn["wo"] = jax.vmap(pack_o)(params["blocks"]["attn"]["wo"])
+    if "bq" in attn:
+        attn["bq"] = jax.vmap(lambda b: pack_q(b[None])[0])(
+            params["blocks"]["attn"]["bq"])
+    pp["blocks"]["attn"] = attn
+    for k in params:
+        if k != "blocks":
+            pp[k] = params[k]
+
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                              cfg.vocab_size)
+    ref, _, _ = __import__("repro.models.transformer",
+                           fromlist=["forward_train"]).forward_train(
+        params, cfg, toks, act_dtype=jnp.float32, remat=False)
+    out, _, _ = __import__("repro.models.transformer",
+                           fromlist=["forward_train"]).forward_train(
+        pp, cfgp, toks, act_dtype=jnp.float32, remat=False)
+    err = float(jnp.max(jnp.abs(ref - out)))
+    assert err < 1e-4, err
+
+
+def test_ragged_moe_matches_padded():
+    """Dropless ragged-dot MoE equals the capacity dispatch when nothing
+    drops (capacity_factor high)."""
+    cfg = get_config("olmoe-1b-7b").reduced()
+    cfgp = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    cfgr = dataclasses.replace(cfg, moe_ragged=True)
+    params = M.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    l1, _ = M.loss_fn(params, cfgp, {"tokens": toks}, act_dtype=jnp.float32)
+    l2, _ = M.loss_fn(params, cfgr, {"tokens": toks}, act_dtype=jnp.float32)
+    assert abs(float(l1) - float(l2)) < 2e-3

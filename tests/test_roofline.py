@@ -1,0 +1,68 @@
+"""HLO roofline-parser unit tests on synthetic HLO text."""
+import pytest
+
+from repro.launch.roofline import (Roofline, _shape_bytes, collective_bytes,
+                                   hlo_costs_scaled)
+
+HLO = """
+HloModule test
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%x), replica_groups=[2]<=[2], dimensions={0}
+  ROOT %t = (s32[], f32[128,128]) tuple(%i, %y)
+}
+
+%cond (p: (s32[], f32[128,128])) -> pred[] {
+  %p2 = (s32[], f32[128,128]) parameter(0)
+  ROOT %lt = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main (a: f32[128,64], b: f32[64,128]) -> f32[128,128] {
+  %a = f32[128,64]{1,0} parameter(0)
+  %b = f32[64,128]{1,0} parameter(1)
+  %dot.1 = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[128,128]{1,0} all-reduce(%dot.1), replica_groups={}, to_apply=%add
+  %w = (s32[], f32[128,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[128,128]{1,0} add(%ar, %ar)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,128]") == 128 * 128 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert _shape_bytes("pred[8]") == 8
+
+
+def test_collective_bytes_with_trip_count():
+    out = collective_bytes(HLO)
+    # all-reduce at entry: counted once
+    assert out["all-reduce"] == 128 * 128 * 4
+    # all-gather inside the while body: x10 trip count
+    assert out["all-gather"] == 64 * 128 * 4 * 10
+
+
+def test_dot_flops():
+    out = hlo_costs_scaled(HLO)
+    # entry dot: 2*128*128*64 (body has no dots)
+    assert out["flops"] == pytest.approx(2 * 128 * 128 * 64)
+
+
+def test_collective_lhs_named_after_op():
+    # the result register is itself named %all-gather.N — the shape between
+    # '=' and the op must be parsed, not the register name
+    txt = ("ENTRY %m (p: f32[4]) -> f32[8] {\n"
+           "  %all-gather.12 = f32[8]{0} all-gather(%p), dimensions={0}\n"
+           "}\n")
+    assert collective_bytes(txt)["all-gather"] == 32
+
+
+def test_roofline_terms():
+    r = Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=200e9,
+                 coll_by_op={}, peak_mem_bytes=0)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == pytest.approx(1.0)
+    assert r.dominant in ("compute", "memory", "collective")

@@ -1,0 +1,90 @@
+"""Workload generator + predictor + training substrate tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.workload.apps import TASKS, make_dataset, make_request, pearson
+from repro.workload.generator import poisson_workload
+from repro.workload.tokenizer import encode, token_count
+
+
+def test_eight_tasks_six_apps():
+    assert len(TASKS) == 8
+    assert len({t.app for t in TASKS.values()}) == 6
+
+
+def test_pearson_positive_correlation():
+    """The paper's Table I observation: strong positive correlation between
+    user input length and generation length for every task."""
+    for task in TASKS:
+        reqs = [r for r in make_dataset(120, seed=3) if r.task == task]
+        assert pearson(reqs) > 0.7, task
+
+
+def test_poisson_workload_rate():
+    wl = poisson_workload(rate=5.0, duration=200, seed=0)
+    assert abs(len(wl) / 200 - 5.0) < 1.0
+    times = [r.arrival_time for r in wl]
+    assert times == sorted(times)
+    assert all(0 <= t < 200 for t in times)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_request_invariants(seed):
+    rng = np.random.default_rng(seed)
+    task = list(TASKS)[seed % len(TASKS)]
+    r = make_request(task, rng)
+    assert 1 <= r.gen_length <= 1024
+    assert r.length <= 1024
+    assert r.user_input_length <= r.length
+    assert token_count(r.user_input, bos=False) == r.user_input_length
+
+
+def test_tokenizer_determinism_and_range():
+    ids = encode("fix the bug in this code", vocab_size=1000)
+    assert ids == encode("fix the bug in this code", vocab_size=1000)
+    assert all(0 <= i < 1000 for i in ids)
+    assert ids[0] == 1  # BOS
+
+
+def test_train_loss_descends():
+    from repro.train.data import DataConfig
+    from repro.train.trainer import TrainConfig, train
+    cfg = get_config("smollm-135m").reduced()
+    out = train(cfg, TrainConfig(steps=30, log_every=30),
+                DataConfig(batch_size=4, seq_len=64))
+    h = out["history"]
+    assert h[-1]["loss"] < 7.0
+    assert np.isfinite(h[-1]["grad_norm"])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as M
+    from repro.train import checkpoint as C
+    cfg = get_config("olmoe-1b-7b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ck.npz")
+    C.save(path, params, step=7)
+    restored, step = C.restore(path, params)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        assert a.shape == b.shape and bool(jnp.allclose(a, b))
+
+
+def test_adamw_decreases_quadratic():
+    import jax
+    import jax.numpy as jnp
+    from repro.train import optimizer as O
+    cfg = O.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                        weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = O.init(cfg, params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = O.update(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
