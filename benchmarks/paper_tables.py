@@ -248,6 +248,17 @@ def kernels() -> List[Row]:
         qd, kd, vd, lens, block_k=128, interpret=True), n=1)
     err = float(jnp.max(jnp.abs(out - decode_attention_ref(qd, kd, vd, lens))))
     rows.append(("kernels/decode_attention", us, f"max_err={err:.2e}"))
+    from repro.kernels.decode_attention.kernel import (
+        paged_decode_attention_kernel)
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    kp = kd.reshape(-1, 32, 2, 64)     # 2*16 pages of 32 tokens
+    vp = vd.reshape(-1, 32, 2, 64)
+    tables = jnp.arange(32, dtype=jnp.int32).reshape(2, 16)
+    us, out = _timeit(lambda: paged_decode_attention_kernel(
+        qd, kp, vp, tables, lens, interpret=True), n=1)
+    err = float(jnp.max(jnp.abs(
+        out - paged_decode_attention_ref(qd, kp, vp, tables, lens))))
+    rows.append(("kernels/paged_decode_attention", us, f"max_err={err:.2e}"))
     x = jax.random.normal(key, (1, 256, 2, 32))
     dt = jax.nn.softplus(jax.random.normal(key, (1, 256, 2)))
     a = -jnp.exp(jax.random.normal(key, (2,)))

@@ -31,6 +31,8 @@ SUITES = {
         duration=30.0 if fast else 60.0),
     "multiarch": lambda fast: E.multiarch(
         duration=20.0 if fast else 40.0),
+    "paged": lambda fast: E.paged_vs_dense(
+        n_requests=8 if fast else 12),
 }
 
 

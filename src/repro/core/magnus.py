@@ -6,6 +6,13 @@ engine driver.  Ablation strategies come from the same class:
   GLP      : + predictor & WMA batching, fixed beta cap
   ABP      : + adaptive batch size (no cap)
   MAGNUS   : + serving-time estimation & HRRN scheduling
+
+Paged variants (beyond-paper; DESIGN.md §8): ``ccb-paged`` and
+``magnus-paged`` swap the Eq.-(5) padded reservation for block-granular
+accounting (`serving.paged_cache.PagedMemoryModel`) and bind one shared
+`BlockAllocator` to both Algorithm-1's memory check and the runtime
+(`serving.engine.PagedContinuousEngine`), so planning Θ and the physical
+pool are the same object.
 """
 from __future__ import annotations
 
@@ -18,28 +25,61 @@ from repro.core.predictor import GenerationLengthPredictor, PredictorConfig
 from repro.core.scheduler import FCFSScheduler, HRRNScheduler
 from repro.core.types import Batch, Request
 from repro.core.wma import MemoryModel
+from repro.serving.paged_cache import BlockAllocator, PagedMemoryModel
+
+STRATEGIES = ("vs", "vsq", "ccb", "glp", "abp", "magnus",
+              "ccb-paged", "magnus-paged")
 
 
 @dataclasses.dataclass
 class MagnusConfig:
-    strategy: str = "magnus"            # vs | vsq | ccb | glp | abp | magnus
+    strategy: str = "magnus"  # vs | vsq | ccb | glp | abp | magnus | *-paged
     wma_threshold: float = 50_000.0     # Φ
     fixed_batch_size: Optional[int] = None  # None => Eq. (1) for vs/vsq/glp
     continuous_learning: bool = True
+    block_tokens: int = 16              # paged strategies: tokens per block
 
 
 class MagnusService:
     def __init__(self, memory: MemoryModel, cfg: Optional[MagnusConfig] = None,
                  predictor: Optional[GenerationLengthPredictor] = None,
                  estimator: Optional[ServingTimeEstimator] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 allocator: Optional[BlockAllocator] = None):
         self.cfg = cfg or MagnusConfig()
-        self.memory = memory
         s = self.cfg.strategy
-        self.uses_prediction = s in ("glp", "abp", "magnus")
-        self.uses_hrrn = s == "magnus"
+        if s not in STRATEGIES:
+            raise ValueError(f"unknown strategy {s!r}; one of {STRATEGIES}")
+        self.paged = s.endswith("-paged")
+        base = s[:-len("-paged")] if self.paged else s
+        self.base_strategy = base
+        self.allocator = allocator
+        if self.paged:
+            # block-size precedence: a caller-supplied allocator dictates
+            # it; else a caller-supplied PagedMemoryModel; else the config.
+            # Accounting and pool must round at one granularity.
+            if self.allocator is not None:
+                bt = self.allocator.block_tokens
+            elif isinstance(memory, PagedMemoryModel):
+                bt = memory.block_tokens
+            else:
+                bt = self.cfg.block_tokens
+            if not isinstance(memory, PagedMemoryModel):
+                memory = PagedMemoryModel(memory, block_tokens=bt)
+            if self.allocator is None:
+                nb = max(1, memory.theta
+                         // (memory.block_tokens * memory.base.delta))
+                self.allocator = BlockAllocator(nb, memory.block_tokens)
+            # planning Θ = the pool the runtime allocates from
+            memory = dataclasses.replace(memory, block_tokens=bt,
+                                         allocator=self.allocator)
+        self.memory = memory
+        # paged admission reserves per-request *predicted* blocks, so every
+        # paged strategy needs the predictor (ccb-paged included)
+        self.uses_prediction = base in ("glp", "abp", "magnus") or self.paged
+        self.uses_hrrn = base == "magnus"
         beta_cap = None
-        if s in ("vs", "vsq", "ccb", "glp"):
+        if base in ("vs", "vsq", "ccb", "glp") and not self.paged:
             beta_cap = (self.cfg.fixed_batch_size
                         or memory.vanilla_batch_size())
         self.beta_cap = beta_cap

@@ -5,5 +5,6 @@ tiling), <name>/ops.py (jit'd wrapper; interpret=True off-TPU) and
 <name>/ref.py (pure-jnp oracle used by the allclose test sweeps).
 """
 from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
-from repro.kernels.decode_attention.ops import decode_attention  # noqa: F401
+from repro.kernels.decode_attention.ops import (  # noqa: F401
+    decode_attention, paged_decode_attention)
 from repro.kernels.ssd_scan.ops import ssd_scan  # noqa: F401

@@ -105,6 +105,98 @@ def _kernel_i8(len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
                     ).astype(o_ref.dtype)
 
 
+def _paged_kernel(tables_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, block_tokens: int, scale: float):
+    """Block-table paged variant: grid (B, Hkv, max_blocks); the KV
+    BlockSpecs gather physical pages through the scalar-prefetched
+    ``tables_ref`` so only each request's own blocks are DMA'd — the
+    shared pool never materializes per-request."""
+    bi = pl.program_id(0)
+    ji = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(ji == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[bi]
+    k_start = ji * block_tokens
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # [G, D]
+        k = k_ref[0, :, 0].astype(jnp.float32)              # [bt, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, bt]
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev, l_prev = m_ref[:, 0], l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_prev * alpha + p.sum(axis=1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(p, v_ref[0, :, 0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ji == nj - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array, block_tables: jax.Array,
+                                  lengths: jax.Array, *,
+                                  interpret: bool = False) -> jax.Array:
+    """q: [B, Hq, D]; pages: [num_blocks, block_tokens, Hkv, D];
+    block_tables: [B, max_blocks] physical block ids (pad entries must be
+    valid ids — they are masked, but still indexed); lengths: [B]
+    -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    _, bt, hkv, _ = k_pages.shape
+    max_blocks = block_tables.shape[1]
+    g = hq // hkv
+
+    qt = q.reshape(b, hkv, g, d)
+    grid = (b, hkv, max_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, hi, ji, tables, lens: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bt, 1, d),
+                         lambda bi, hi, ji, tables, lens:
+                         (tables[bi, ji], 0, hi, 0)),
+            pl.BlockSpec((1, bt, 1, d),
+                         lambda bi, hi, ji, tables, lens:
+                         (tables[bi, ji], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, ji, tables, lens:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, block_tokens=bt, scale=d ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      qt, k_pages, v_pages)
+    return out.reshape(b, hq, d)
+
+
 def decode_attention_int8_kernel(q: jax.Array, k_cache: jax.Array,
                                  v_cache: jax.Array, k_scale: jax.Array,
                                  v_scale: jax.Array, lengths: jax.Array, *,

@@ -6,8 +6,10 @@ import functools
 import jax
 
 from repro.kernels.decode_attention.kernel import (
-    decode_attention_int8_kernel, decode_attention_kernel)
-from repro.kernels.decode_attention.ref import decode_attention_ref
+    decode_attention_int8_kernel, decode_attention_kernel,
+    paged_decode_attention_kernel)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref, paged_decode_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "use_ref"))
@@ -18,6 +20,20 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
     interpret = jax.devices()[0].platform != "tpu"
     return decode_attention_kernel(q, k_cache, v_cache, lengths,
                                    block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           use_ref: bool = False):
+    """Block-table paged decode attention (shared page pool; per-request
+    tables).  ``use_ref`` or any non-TPU backend falls back to the
+    gather-based oracle — the Pallas path only pays off when the pool
+    lives in HBM and the tables keep the DMA set small."""
+    if use_ref or jax.devices()[0].platform != "tpu":
+        return paged_decode_attention_ref(q, k_pages, v_pages,
+                                          block_tables, lengths)
+    return paged_decode_attention_kernel(q, k_pages, v_pages, block_tables,
+                                         lengths)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k",))

@@ -7,6 +7,21 @@ import jax
 import jax.numpy as jnp
 
 
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_tables: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """Gather-based oracle for the block-table kernel: pages
+    [num_blocks, block_tokens, Hkv, D] are gathered through
+    ``block_tables`` [B, max_blocks] into a dense [B, S, Hkv, D] view and
+    fed to the dense oracle.  S = max_blocks * block_tokens; positions
+    past ``lengths`` (including whole pad-table pages) are masked."""
+    b, hq, d = q.shape
+    _, bt, hkv, _ = k_pages.shape
+    k = k_pages[block_tables].reshape(b, -1, hkv, d)
+    v = v_pages[block_tables].reshape(b, -1, hkv, d)
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
                          v_cache: jax.Array, lengths: jax.Array) -> jax.Array:
     """q: [B, Hq, D]; caches: [B, S, Hkv, D]; lengths: [B] -> [B, Hq, D]."""

@@ -64,6 +64,29 @@ def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, Any], *,
                            act_dtype=act_dtype)
 
 
+def supports_paged(cfg: ModelConfig) -> Tuple[bool, str]:
+    if _is_encdec(cfg):
+        return False, "enc-dec cross-KV caches are not paged"
+    return transformer.supports_paged(cfg)
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_tokens: int,
+                     dtype=jnp.bfloat16):
+    return transformer.init_paged_cache(cfg, num_blocks, block_tokens, dtype)
+
+
+def decode_step_paged(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
+                      *, rules=None, act_dtype=jnp.bfloat16):
+    """batch: {"tokens": [B], "positions": [B], "block_tables": [B, M]}."""
+    return transformer.decode_step_paged(
+        params, cfg, pages, batch["tokens"], batch["positions"],
+        batch["block_tables"], rules=rules, act_dtype=act_dtype)
+
+
+def write_prefill_pages(pages, kv, table):
+    return transformer.write_prefill_pages(pages, kv, table)
+
+
 def cache_struct(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
     mod = encdec if _is_encdec(cfg) else transformer
     return mod.cache_struct(cfg, batch, seq, dtype)

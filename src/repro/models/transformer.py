@@ -496,3 +496,112 @@ def cache_struct(cfg: ModelConfig, batch: int, seq: int,
 def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
     shapes, _ = cache_struct(cfg, batch, seq, dtype)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: shared physical block pool + per-request block tables
+# (serving.PagedContinuousEngine; DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Paged decode covers the plain-GQA KV families; the exotic cache
+    layouts (MLA latents, SSM states, int8 pairs, SWA rings) keep the
+    dense path."""
+    if cfg.family not in ("dense", "moe"):
+        return False, f"family {cfg.family} has no paged cache layout"
+    if cfg.uses_mla:
+        return False, "MLA latent caches are not paged"
+    if cfg.cache_int8:
+        return False, "int8 (value, scale) caches are not paged"
+    if cfg.sliding_window is not None:
+        return False, "sliding-window ring caches are not paged"
+    hq = max(cfg.num_heads, cfg.pad_heads_to)
+    if hq % cfg.num_kv_heads:
+        return False, "padded q-heads not a multiple of kv-heads"
+    return True, ""
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_tokens: int,
+                     dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """One K and one V pool per layer: [L, num_blocks, block_tokens,
+    Hkv, D].  Block ids index axis 1; every request addresses the same
+    physical block id across all layers (one table, L pools)."""
+    ok, why = supports_paged(cfg)
+    if not ok:
+        raise NotImplementedError(why)
+    shape = (cfg.num_layers, num_blocks, block_tokens,
+             cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _attention_decode_paged(ap: dict, x, cfg: ModelConfig, k_pages, v_pages,
+                            block_tables, positions):
+    """One-token GQA attention against the shared pool.  The new K/V is
+    scattered to (table[pos // bt], pos % bt); attention runs through the
+    block-table kernel (gather oracle off-TPU)."""
+    from repro.kernels.decode_attention.ops import paged_decode_attention
+    bt = k_pages.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    q = apply_rope(q, positions[:, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    phys = jnp.take_along_axis(block_tables, (positions // bt)[:, None],
+                               axis=1)[:, 0]
+    slot = positions % bt
+    k_pages = k_pages.at[phys, slot].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, slot].set(v[:, 0].astype(v_pages.dtype))
+    out = paged_decode_attention(q[:, 0], k_pages, v_pages,
+                                 block_tables, positions + 1)
+    return (jnp.einsum("bshk,hkd->bsd", out[:, None].astype(x.dtype),
+                       ap["wo"]),
+            {"k": k_pages, "v": v_pages})
+
+
+def decode_step_paged(params, cfg: ModelConfig, pages, tokens, positions,
+                      block_tables, *, rules=None, act_dtype=jnp.bfloat16):
+    """tokens: [B] new ids; positions: [B] tokens already cached;
+    block_tables: [B, max_blocks] physical page ids (pad entries must be
+    valid ids).  Returns (logits [B, V], updated pages)."""
+    params = cast_params(params, act_dtype)
+    x = _embed_in(params, cfg, tokens[:, None], None, act_dtype)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), rules)
+
+    def body(h, xs):
+        bp, page_l = xs
+        hh = rms_norm(h, bp["norm1"], cfg.norm_eps)
+        y, new_pages = _attention_decode_paged(
+            bp["attn"], hh, cfg, page_l["k"], page_l["v"],
+            block_tables, positions)
+        h = h + y
+        h, _ = _ffn(bp, h, cfg, rules)
+        h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules)
+        return h, new_pages
+
+    x, new_pages = jax.lax.scan(body, x, (params["blocks"], pages))
+    logits = _logits(params, cfg, x, rules)[:, 0]
+    return logits, new_pages
+
+
+def write_prefill_pages(pages, kv, table) -> Dict[str, jax.Array]:
+    """Scatter a single-request dense prefill cache (k, v each
+    [L, 1, S, Hkv, D]) into the request's blocks.  ``table`` is the
+    request's (host-side) block-id list; S is clipped/padded to the
+    table capacity — only the first L(p) positions are ever valid."""
+    nb = len(table)
+    bt = pages["k"].shape[2]
+    idx = jnp.asarray(table, jnp.int32)
+
+    def put(pool, c):
+        l, _, s, h, dh = c.shape
+        c = c[:, 0, :min(s, nb * bt)]
+        if c.shape[1] < nb * bt:
+            c = jnp.pad(c, ((0, 0), (0, nb * bt - c.shape[1]),
+                            (0, 0), (0, 0)))
+        c = c.reshape(l, nb, bt, h, dh).astype(pool.dtype)
+        return pool.at[:, idx].set(c)
+
+    k, v = kv
+    return {"k": put(pages["k"], k), "v": put(pages["v"], v)}

@@ -7,6 +7,11 @@
   reality.
 - :class:`ContinuousEngine` — conservative continuous batching (CCB):
   slot-based active set; a joining request's prefill pauses the instance.
+- :class:`PagedContinuousEngine` — continuous batching over a shared
+  physical block pool (`serving.paged_cache.BlockAllocator`): admission
+  reserves blocks for the *predicted* generation length only, decode
+  grows per-request block tables block-by-block, and a failed grow
+  evicts-and-requeues instead of splitting the batch (DESIGN.md §8).
 
 Generation is *length-scripted replay*: logits are computed by the real
 model (compute is real), but EOS fires at the request's ground-truth
@@ -28,7 +33,13 @@ from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
 from repro.core.wma import batch_wma
 from repro.models import model as M
+from repro.serving.paged_cache import BlockAllocator
 from repro.workload.tokenizer import encode
+
+
+class EngineFull(RuntimeError):
+    """Admission refused: no free slot / not enough free KV blocks.
+    Callers must keep the request queued and retry after a step()."""
 
 
 def _bucket(n: int, buckets=(8, 16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
@@ -155,7 +166,15 @@ class ContinuousEngine:
                         + [(0, 0)] * (src.ndim - 3)).astype(dst.dtype))
         self.cache = jax.tree.map(merge, self.cache, single_cache)
 
+    @property
+    def has_capacity(self) -> bool:
+        return None in self.active
+
     def join(self, req: Request) -> int:
+        if not self.has_capacity:
+            raise EngineFull(
+                f"all {self.slots} slots occupied; queue req "
+                f"{req.req_id} and retry after step()")
         slot = self.active.index(None)
         ids = encode(f"{req.instruction} {req.user_input}",
                      self.cfg.vocab_size)[:self.max_len]
@@ -202,3 +221,239 @@ class ContinuousEngine:
                 self.active[slot] = None
                 self.positions[slot] = 0
         return finished
+
+
+class PagedContinuousEngine:
+    """Continuous batching over a shared physical block pool.
+
+    KV lives in per-layer pools ``[L, num_blocks, block_tokens, Hkv, D]``;
+    each active request owns a block table (allocator seq_id = its slot).
+    Admission reserves ``L(p) + G'(p)`` tokens of blocks — the *predicted*
+    generation length, not G_max — so concurrency at a given Θ is bounded
+    by actual footprints, not the dense engines' ``(L_max + G_max)`` slot
+    reservation.  When a request outlives its prediction, decode grows its
+    table one block at a time; if the pool is exhausted, the least-progress
+    other request is evicted (blocks freed, request returned for requeue —
+    recompute-on-readmit preemption, not the padded engines' batch split).
+
+    A reserved *null block* backs every inactive/pad table entry so masked
+    gathers and idle-slot writes can never touch a live request's pages.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
+                 max_concurrency: int = 8, num_blocks: int = 64,
+                 block_tokens: int = 16, max_len: int = 256,
+                 max_gen: int = 64, dtype=jnp.float32,
+                 allocator: Optional[BlockAllocator] = None):
+        ok, why = M.supports_paged(cfg)
+        if not ok:
+            raise NotImplementedError(f"{cfg.name}: {why}")
+        self.cfg = cfg
+        self.max_len = max_len
+        self.max_gen = max_gen
+        self.dtype = dtype
+        self.allocator = allocator if allocator is not None else \
+            BlockAllocator(num_blocks, block_tokens)
+        self.bt = self.allocator.block_tokens
+        self.slots = max_concurrency
+        self.max_blocks = -(-(max_len + max_gen) // self.bt)
+        # the null block: every pad/idle table entry points here
+        self.null_block = self.allocator.allocate(self._NULL_SEQ, 1)[0]
+        self.params = params if params is not None else M.init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self._prefill = jax.jit(
+            functools.partial(M.prefill, cfg=cfg, act_dtype=dtype),
+            static_argnames=("cache_len",))
+        self._decode = jax.jit(
+            functools.partial(M.decode_step_paged, cfg=cfg, act_dtype=dtype))
+        self.pages = M.init_paged_cache(
+            cfg, self.allocator.num_blocks, self.bt,
+            dtype=jnp.float32 if dtype == jnp.float32 else jnp.bfloat16)
+        b = self.slots
+        self.active: List[Optional[dict]] = [None] * b
+        self.tables = np.full((b, self.max_blocks), self.null_block, np.int32)
+        self.positions = np.zeros(b, np.int32)
+        self.logits = jnp.zeros((b, cfg.padded_vocab), dtype)
+        self.evictions = 0
+        self.generated: Dict[int, List[int]] = {}   # finished req -> tokens
+
+    _NULL_SEQ = -1   # allocator seq_id owning the null block, never freed
+
+    # -- admission -----------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return sum(a is not None for a in self.active)
+
+    def _prompt_ids(self, req: Request) -> List[int]:
+        return encode(f"{req.instruction} {req.user_input}",
+                      self.cfg.vocab_size)[:self.max_len]
+
+    def reserve_tokens(self, req: Request,
+                       n_prompt: Optional[int] = None) -> int:
+        """Admission footprint: encoded prompt + *predicted* generation
+        tokens (exactly what ``join`` will reserve)."""
+        if n_prompt is None:
+            n_prompt = len(self._prompt_ids(req))
+        g = (req.predicted_gen_length
+             if req.predicted_gen_length is not None else self.max_gen)
+        return n_prompt + max(1, min(g, self.max_gen))
+
+    def can_admit(self, req: Request) -> bool:
+        return (None in self.active
+                and self.allocator.can_allocate(-2, self.reserve_tokens(req)))
+
+    def join(self, req: Request) -> int:
+        if None not in self.active:
+            raise EngineFull(f"all {self.slots} slots occupied")
+        slot = self.active.index(None)
+        ids = self._prompt_ids(req)
+        want = self.reserve_tokens(req, n_prompt=len(ids))
+        if not self.allocator.can_allocate(slot, want):
+            raise EngineFull(
+                f"{self.allocator.blocks_needed(want)} blocks wanted, "
+                f"{len(self.allocator.free)} free")
+        table = self.allocator.allocate(slot, want)
+        pad = _bucket(len(ids))
+        tokens = np.zeros((1, pad), np.int64)
+        tokens[0, :len(ids)] = ids
+        logits, single_cache = self._prefill(
+            self.params,
+            batch={"tokens": jnp.asarray(tokens),
+                   "lengths": jnp.asarray([len(ids)], np.int32)})
+        self.pages = M.write_prefill_pages(self.pages, single_cache["kv"],
+                                           list(table))
+        self.tables[slot, :] = self.null_block
+        self.tables[slot, :len(table)] = table
+        self.logits = self.logits.at[slot].set(logits[0].astype(self.dtype))
+        self.positions[slot] = len(ids)
+        self.active[slot] = {"req": req, "generated": [],
+                             "target": min(req.gen_length, self.max_gen)}
+        return slot
+
+    # -- eviction ------------------------------------------------------------
+
+    def _evict(self, slot: int) -> Request:
+        req = self.active[slot]["req"]
+        self.allocator.free_seq(slot)
+        self.tables[slot, :] = self.null_block
+        self.positions[slot] = 0
+        self.active[slot] = None
+        self.evictions += 1
+        return req
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Least decode progress first (cheapest recompute on readmit)."""
+        best, best_prog = None, None
+        for slot, a in enumerate(self.active):
+            if a is None or slot == exclude:
+                continue
+            prog = len(a["generated"])
+            if best is None or prog < best_prog:
+                best, best_prog = slot, prog
+        return best
+
+    def _grow(self, slot: int, evicted: List[Request]) -> None:
+        """Ensure slot can hold positions[slot]+1 tokens; evict on demand."""
+        need = int(self.positions[slot]) + 1
+        if self.allocator.blocks_needed(need) > self.max_blocks:
+            raise MemoryError(
+                f"request outgrew max_len+max_gen table ({self.max_blocks} "
+                f"blocks)")
+        # impossible-fit check BEFORE any eviction: evicting the whole
+        # world and then raising would strand the already-evicted requests
+        if self.allocator.blocks_needed(need) > self.allocator.num_blocks - 1:
+            raise MemoryError(
+                f"paged pool ({self.allocator.num_blocks} blocks) smaller "
+                f"than one request's "
+                f"{self.allocator.blocks_needed(need)}-block KV")
+        while not self.allocator.can_allocate(slot, need):
+            victim = self._pick_victim(exclude=slot)
+            if victim is None:
+                # fits the pool on paper but no victim to free: blocks are
+                # held by a foreign seq on a shared allocator
+                raise MemoryError(
+                    "paged pool exhausted by sequences outside this engine")
+            evicted.append(self._evict(victim))
+        table = self.allocator.allocate(slot, need)
+        self.tables[slot, :len(table)] = table
+
+    # -- decode --------------------------------------------------------------
+
+    def step(self) -> Tuple[List[Request], List[Request]]:
+        """One decode iteration over all active requests.
+        Returns (finished, evicted); evicted requests must be requeued by
+        the caller (they restart from scratch when re-admitted)."""
+        if not any(a is not None for a in self.active):
+            return [], []
+        evicted: List[Request] = []
+        try:
+            for slot, a in enumerate(self.active):
+                if a is not None:
+                    self._grow(slot, evicted)
+        except MemoryError as e:
+            # don't strand requests evicted earlier in this same step:
+            # hand them to the caller on the exception for requeue
+            e.evicted = evicted
+            raise
+        next_tok = jnp.argmax(self.logits[:, :self.cfg.vocab_size],
+                              axis=-1).astype(jnp.int32)
+        for slot, a in enumerate(self.active):
+            if a is not None:
+                a["generated"].append(int(next_tok[slot]))
+        # hand JAX *copies*: jnp.asarray may zero-copy alias numpy buffers
+        # on CPU, and self.positions / self.tables are mutated in place
+        # while the async decode still reads them
+        self.logits, self.pages = self._decode(
+            self.params, pages=self.pages,
+            batch={"tokens": next_tok,
+                   "positions": jnp.asarray(self.positions.copy()),
+                   "block_tables": jnp.asarray(self.tables.copy())})
+        self.logits = self.logits.astype(self.dtype)
+        finished = []
+        for slot, a in enumerate(self.active):
+            if a is None:
+                continue
+            self.positions[slot] += 1
+            if len(a["generated"]) >= a["target"]:
+                finished.append(a["req"])
+                self.generated[a["req"].req_id] = a["generated"]
+                self.allocator.free_seq(slot)
+                self.tables[slot, :] = self.null_block
+                self.positions[slot] = 0
+                self.active[slot] = None
+        return finished, evicted
+
+    def utilization(self) -> float:
+        """1 - internal fragmentation over live tokens (null block counts
+        as overhead)."""
+        live = int(sum(self.positions[s] for s, a in enumerate(self.active)
+                       if a is not None))
+        return self.allocator.utilization(live)
+
+
+def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
+                max_steps: int = 2_000) -> Dict[str, object]:
+    """The canonical paged serve loop: admit greedily until ``EngineFull``,
+    step, requeue evictions at the queue front.  One implementation shared
+    by the benchmark, the launcher, and the tests so they all measure the
+    same serving discipline."""
+    pending = list(requests)
+    served = steps = peak = evictions = 0
+    util: List[float] = []
+    while (pending or engine.num_active) and steps < max_steps:
+        while pending:
+            try:
+                engine.join(pending[0])
+                pending.pop(0)
+            except EngineFull:
+                break
+        peak = max(peak, engine.num_active)
+        finished, evicted = engine.step()
+        served += len(finished)
+        evictions += len(evicted)
+        pending = evicted + pending
+        util.append(engine.utilization())
+        steps += 1
+    return {"served": served, "steps": steps, "peak": peak,
+            "evictions": evictions, "util": util, "unserved": pending}

@@ -66,12 +66,23 @@ class PagedMemoryModel:
     """MemoryModel-compatible facade: MEM(B) under block-granular
     allocation. ``mem_of``/``theta``/``physical_limit`` keep the batcher's
     Algorithm-1 interface; request footprints round up to blocks instead
-    of reserving (L_max + G_max)."""
+    of reserving (L_max + G_max).
+
+    When bound to a :class:`BlockAllocator` (``allocator``), planning Θ is
+    the pool's exact byte capacity, so the batcher's Algorithm-1 check and
+    the runtime engine admit against the same physical blocks."""
     base: MemoryModel
     block_tokens: int = 16
+    allocator: Optional[BlockAllocator] = None
 
     @property
     def theta(self) -> int:
+        if self.allocator is not None:
+            # seq -1 is the engine's permanently-reserved null block
+            # (PagedContinuousEngine._NULL_SEQ): not plannable capacity
+            usable = (self.allocator.num_blocks
+                      - len(self.allocator.tables.get(-1, ())))
+            return usable * self.allocator.block_tokens * self.base.delta
         return self.base.theta
 
     @property

@@ -1,6 +1,8 @@
 """Run a (strategy x workload) simulation — the paper's experiment driver.
 
-Strategies: vs | vsq | ccb | glp | abp | magnus   (Figs 10-13).
+Strategies: vs | vsq | ccb | glp | abp | magnus   (Figs 10-13),
+plus the beyond-paper paged variants ccb-paged | magnus-paged
+(block-granular admission accounting; DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -43,7 +45,9 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
                  kv_dtype_bytes: int = 2,
                  seed: int = 0) -> Metrics:
     workload = copy.deepcopy(workload)   # sims mutate finish times
-    quant = strategy == "vsq"
+    paged = strategy.endswith("-paged")
+    base_strategy = strategy[:-len("-paged")] if paged else strategy
+    quant = base_strategy == "vsq"
     # int4 weights free memory => larger Eq.-(1) beta (paper: 7 -> 10)
     memory = MemoryModel(cfg, hbm_bytes=hw.hbm_bytes * hw.chips,
                          dtype_bytes=kv_dtype_bytes,
@@ -61,7 +65,8 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
                             parallel_limit=limit).run(workload)
     svc_cfg = MagnusConfig(strategy=strategy, wma_threshold=wma_threshold,
                            fixed_batch_size=fixed_batch_size)
-    if predictor is None and strategy in ("glp", "abp", "magnus"):
+    if predictor is None and (paged
+                              or base_strategy in ("glp", "abp", "magnus")):
         predictor = GenerationLengthPredictor(seed=seed).fit(
             train_requests or make_dataset(150, seed=seed + 1))
     svc = MagnusService(memory, svc_cfg, predictor=predictor,

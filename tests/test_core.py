@@ -3,8 +3,12 @@ Algorithm 1 batcher, estimator, HRRN scheduler, regressors — with
 hypothesis property tests on the system's invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # bare env: seeded fallback (repro.testing)
+    from repro.testing import given, settings
+    from repro.testing import strategies as st
 
 from repro.configs import get_config
 from repro.core.batcher import AdaptiveBatcher, BatcherConfig
@@ -201,6 +205,7 @@ def test_estimator_learns_cost_model():
 
 
 # ------------------------------------------------- continuous learning ----
+@pytest.mark.slow
 def test_predictor_continuous_learning_reduces_error():
     train = make_dataset(40, seed=0)
     test = make_dataset(40, seed=1)

@@ -135,3 +135,83 @@ def test_decode_attention_int8(s, hq, hkv, d):
                                        block_k=64, interpret=True)
     ref = decode_attention_ref(q, k, v, lengths)
     assert float(jnp.max(jnp.abs(out - ref))) < 0.05
+
+
+# ---------------- block-table paged decode attention ----------------
+
+def _paged_setup(b, nb, bt, hq, hkv, d, mb, lengths, dtype=jnp.float32):
+    """Random pool + disjoint per-request tables covering ``lengths``."""
+    q = jax.random.normal(KEY, (b, hq, d), dtype)
+    kp = jax.random.normal(jax.random.fold_in(KEY, 1), (nb, bt, hkv, d), dtype)
+    vp = jax.random.normal(jax.random.fold_in(KEY, 2), (nb, bt, hkv, d), dtype)
+    tables = jnp.zeros((b, mb), jnp.int32)
+    nxt = 1                      # block 0 plays the shared null/pad block
+    for i, ln in enumerate(lengths):
+        for j in range(-(-ln // bt)):
+            tables = tables.at[i, j].set(nxt)
+            nxt += 1
+    assert nxt <= nb
+    return q, kp, vp, tables, jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("bt,hq,hkv,d,lengths",
+                         [(16, 4, 4, 64, (48, 17, 5)),      # non-multiples
+                          (16, 4, 2, 64, (64, 33, 16)),
+                          (8, 8, 1, 32, (40, 23, 9)),
+                          (32, 6, 2, 64, (96, 1, 50))])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(bt, hq, hkv, d, lengths, dtype):
+    from repro.kernels.decode_attention.kernel import (
+        paged_decode_attention_kernel)
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+    b = len(lengths)
+    mb = max(-(-ln // bt) for ln in lengths)
+    nb = sum(-(-ln // bt) for ln in lengths) + 1
+    q, kp, vp, tables, lens = _paged_setup(b, nb, bt, hq, hkv, d, mb,
+                                           lengths, dtype)
+    out = paged_decode_attention_kernel(q, kp, vp, tables, lens,
+                                        interpret=True)
+    ref = paged_decode_attention_ref(q, kp, vp, tables, lens)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+    assert float(err) < (5e-2 if dtype == jnp.bfloat16 else 1e-3), float(err)
+
+
+def test_paged_matches_dense_decode_attention():
+    """Identity block tables over a contiguous pool == the dense kernel's
+    answer: paging changes layout, not math."""
+    from repro.kernels.decode_attention.ref import (
+        decode_attention_ref, paged_decode_attention_ref)
+    b, s, hq, hkv, d, bt = 2, 64, 4, 2, 32, 16
+    q = jax.random.normal(KEY, (b, hq, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, d))
+    lengths = jnp.array([50, 29])
+    # request i's pages are the contiguous slices of its own dense cache
+    kp = k.reshape(b * (s // bt), bt, hkv, d)
+    vp = v.reshape(b * (s // bt), bt, hkv, d)
+    tables = jnp.arange(b * (s // bt), dtype=jnp.int32).reshape(b, s // bt)
+    ref_dense = decode_attention_ref(q, k, v, lengths)
+    ref_paged = paged_decode_attention_ref(q, kp, vp, tables, lengths)
+    assert float(jnp.max(jnp.abs(ref_dense - ref_paged))) < 1e-6
+
+
+def test_paged_decode_attention_masks_foreign_pages():
+    """Poisoning (a) positions past a request's length inside its last
+    block and (b) every block NOT in its table must not change its
+    output — the isolation property the shared pool depends on."""
+    from repro.kernels.decode_attention.kernel import (
+        paged_decode_attention_kernel)
+    bt, hq, hkv, d = 16, 4, 2, 32
+    lengths = (23, 40)
+    b, mb = 2, 3
+    nb = 6
+    q, kp, vp, tables, lens = _paged_setup(b, nb, bt, hq, hkv, d, mb, lengths)
+    out1 = paged_decode_attention_kernel(q, kp, vp, tables, lens,
+                                         interpret=True)
+    # poison: block 0 (null), request 0's tail (23 % 16 = 7 into block 2),
+    # and all of request 1's blocks as seen from request 0's table mask
+    kp2 = kp.at[0].set(1e4).at[2, 7:].set(-1e4)
+    vp2 = vp.at[0].set(1e4).at[2, 7:].set(-1e4)
+    out2 = paged_decode_attention_kernel(q, kp2, vp2, tables, lens,
+                                         interpret=True)
+    assert jnp.allclose(out1[0], out2[0], atol=1e-5)

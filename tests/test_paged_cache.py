@@ -3,8 +3,12 @@ batcher integration (per-request block accounting beats the padded
 Eq.-(5) reservation)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # bare env: seeded fallback (repro.testing)
+    from repro.testing import given, settings
+    from repro.testing import strategies as st
 
 from repro.configs import get_config
 from repro.core.batcher import AdaptiveBatcher, BatcherConfig
@@ -79,3 +83,92 @@ def test_fragmentation_metric():
     a = BlockAllocator(num_blocks=100, block_tokens=16)
     a.allocate(1, 17)   # 2 blocks for 17 tokens
     assert a.utilization(17) == pytest.approx(17 / 32)
+
+
+# ---------------- edge cases the paged engine relies on ----------------
+
+def test_allocator_grow_by_zero():
+    """Re-allocating at or below current capacity is a no-op, including
+    tokens=0 on a fresh sequence."""
+    a = BlockAllocator(num_blocks=8, block_tokens=16)
+    t = a.allocate(1, 40)                 # 3 blocks
+    assert a.allocate(1, 40) is t and len(t) == 3
+    a.allocate(1, 16)                     # shrink request: no-op, no free
+    assert len(t) == 3 and a.used_blocks == 3
+    a.allocate(2, 0)                      # zero tokens: table exists, empty
+    assert a.tables[2] == [] and a.used_blocks == 3
+
+
+def test_allocator_free_unknown_seq():
+    a = BlockAllocator(num_blocks=4, block_tokens=16)
+    a.allocate(1, 16)
+    a.free_seq(999)                       # unknown: silent no-op
+    assert a.used_blocks == 1
+    a.free_seq(1)
+    a.free_seq(1)                         # double free: silent no-op
+    assert a.used_blocks == 0 and len(a.free) == 4
+
+
+def test_allocator_exact_boundary_can_allocate():
+    a = BlockAllocator(num_blocks=4, block_tokens=16)
+    assert a.can_allocate(1, 4 * 16)          # exactly the pool
+    assert not a.can_allocate(1, 4 * 16 + 1)  # one token over
+    a.allocate(1, 33)                          # 3 blocks
+    assert a.can_allocate(2, 16)
+    assert not a.can_allocate(2, 17)
+    assert a.can_allocate(1, 4 * 16)           # grow-by-1 fits exactly
+    assert not a.can_allocate(1, 4 * 16 + 1)
+
+
+def test_allocator_utilization_after_eviction():
+    a = BlockAllocator(num_blocks=10, block_tokens=16)
+    a.allocate(1, 30)    # 2 blocks, 30 live tokens
+    a.allocate(2, 50)    # 4 blocks, 50 live tokens
+    assert a.utilization(80) == pytest.approx(80 / 96)
+    a.free_seq(2)        # evicted: its tokens are gone from live count
+    assert a.used_blocks == 2
+    assert a.utilization(30) == pytest.approx(30 / 32)
+    a.free_seq(1)
+    assert a.utilization(0) == 1.0       # empty pool: no fragmentation
+
+
+def test_paged_strategy_shares_one_allocator():
+    """magnus-paged: the service's memory model and its allocator are the
+    same physical pool (Algorithm-1 checks == runtime admission)."""
+    from repro.core.magnus import MagnusConfig, MagnusService
+    cfg = get_config("chatglm-6b")
+    base = MemoryModel(cfg, hbm_bytes=32 * 2 ** 30, dtype_bytes=4)
+    svc = MagnusService(base, MagnusConfig(strategy="magnus-paged"))
+    assert svc.paged and svc.base_strategy == "magnus"
+    assert svc.allocator is not None
+    assert svc.memory.allocator is svc.allocator
+    assert svc.memory.theta == (svc.allocator.num_blocks
+                                * svc.allocator.block_tokens
+                                * svc.memory.base.delta)
+    assert svc.uses_prediction and svc.uses_hrrn
+    assert svc.beta_cap is None
+    ccb = MagnusService(base, MagnusConfig(strategy="ccb-paged"))
+    assert ccb.uses_prediction and not ccb.uses_hrrn
+
+
+def test_paged_strategy_runs_in_cluster_sim():
+    from repro.serving.cost_model import V100_32G
+    from repro.sim.runner import run_strategy
+    from repro.workload.generator import poisson_workload
+    cfg = get_config("chatglm-6b")
+    wl = poisson_workload(rate=3.0, duration=15, seed=0)
+    m = run_strategy("magnus-paged", wl, cfg, hw=V100_32G, kv_dtype_bytes=4)
+    assert m.completed == len(wl)
+    assert m.request_throughput > 0
+
+
+def test_paged_memory_allocator_bound_theta():
+    """Bound to an allocator, planning Θ is the pool's exact capacity —
+    the Algorithm-1 check and the runtime admit against the same blocks."""
+    import dataclasses
+    cfg = get_config("chatglm-6b")
+    paged = make_paged_memory(cfg, hbm_bytes=32 * 2 ** 30, dtype_bytes=4)
+    alloc = BlockAllocator(num_blocks=64, block_tokens=16)
+    bound = dataclasses.replace(paged, allocator=alloc)
+    assert bound.theta == 64 * 16 * paged.base.delta
+    assert bound.theta != paged.theta

@@ -1,0 +1,153 @@
+"""PagedContinuousEngine acceptance tests (DESIGN.md §8):
+
+- typed EngineFull admission (dense + paged) instead of crashes
+- paged decode == dense continuous decode token-for-token (scripted
+  replay invariant: paging changes where KV lives, not what's computed)
+- at the same Θ token budget the paged engine admits a strictly larger
+  concurrent batch than the dense-slot engine, without MemoryError
+- prediction undershoot triggers evict-and-requeue and every request
+  still completes
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import (ContinuousEngine, EngineFull,
+                                  PagedContinuousEngine, drive_paged)
+from repro.workload.apps import make_dataset
+
+CFG = get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params():
+    import jax
+    from repro.models import model as M
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _reqs(n, max_gen=10, seed=0, predicted=True, short=False):
+    reqs = make_dataset(2, seed=seed)[:n]
+    for i, r in enumerate(reqs):
+        if short:    # ~20-token prompts: far below the (L_max+G_max) slot
+            r.user_input = " ".join(r.user_input.split()[:6])
+        r.gen_length = 3 + (i * 3) % max_gen
+        r.predicted_gen_length = r.gen_length if predicted else None
+    return reqs
+
+
+def _drain(engine, pending, max_steps=500):
+    """Returns (#finished, peak concurrency) via the canonical loop."""
+    stats = drive_paged(engine, pending, max_steps=max_steps)
+    return stats["served"], stats["peak"]
+
+
+def test_dense_join_raises_typed_engine_full():
+    eng = ContinuousEngine(CFG, slots=1, max_len=64, max_gen=4)
+    reqs = _reqs(2)
+    eng.join(reqs[0])
+    with pytest.raises(EngineFull):
+        eng.join(reqs[1])
+    # EngineFull is recoverable: finish the slot, then the queued request
+    while not eng.step():
+        pass
+    assert eng.join(reqs[1]) == 0
+
+
+def test_paged_join_raises_typed_engine_full_on_block_exhaustion():
+    eng = PagedContinuousEngine(CFG, max_concurrency=8, num_blocks=6,
+                                block_tokens=16, max_len=64, max_gen=16)
+    reqs = _reqs(4)
+    joined = 0
+    with pytest.raises(EngineFull):
+        for r in reqs:
+            eng.join(r)      # blocks run out before slots do
+            joined += 1
+    assert 1 <= joined < 4
+    assert eng.allocator.used_blocks <= 6
+
+
+def test_paged_matches_dense_continuous_tokens(params):
+    reqs = _reqs(3, seed=2)
+    ce = ContinuousEngine(CFG, params=params, slots=3, max_len=128,
+                          max_gen=16)
+    dense_gen, state = {}, {}
+    for r in reqs:
+        state[ce.join(r)] = r.req_id
+    steps = 0
+    while any(a is not None for a in ce.active) and steps < 60:
+        for slot, a in enumerate(ce.active):
+            if a is not None:
+                dense_gen[a["req"].req_id] = a["generated"]
+        ce.step()
+        steps += 1
+    pe = PagedContinuousEngine(CFG, params=params, max_concurrency=4,
+                               num_blocks=32, block_tokens=16,
+                               max_len=128, max_gen=16)
+    done, _ = _drain(pe, reqs)
+    assert done == len(reqs)
+    for r in reqs:
+        assert pe.generated[r.req_id] == dense_gen[r.req_id], r.req_id
+        assert len(pe.generated[r.req_id]) == min(r.gen_length, 16)
+
+
+def test_paged_admits_strictly_more_at_equal_theta(params):
+    """The acceptance claim: same Θ token budget, strictly larger
+    concurrent batch, no MemoryError."""
+    max_len, max_gen, dense_slots, bt = 128, 16, 2, 16
+    theta_tokens = dense_slots * (max_len + max_gen)   # dense reservation
+    reqs = _reqs(10, seed=1, short=True)
+    dense = ContinuousEngine(CFG, params=params, slots=dense_slots,
+                             max_len=max_len, max_gen=max_gen)
+    pending, dense_peak, done = list(reqs), 0, 0
+    steps = 0
+    while (pending or any(dense.active)) and steps < 300:
+        while pending and dense.has_capacity:
+            dense.join(pending.pop(0))
+        dense_peak = max(dense_peak,
+                         sum(a is not None for a in dense.active))
+        done += len(dense.step())
+        steps += 1
+    assert done == len(reqs)
+    assert dense_peak == dense_slots
+
+    paged = PagedContinuousEngine(
+        CFG, params=params, max_concurrency=theta_tokens // bt,
+        num_blocks=theta_tokens // bt, block_tokens=bt,
+        max_len=max_len, max_gen=max_gen)
+    done, paged_peak = _drain(paged, reqs)
+    assert done == len(reqs)
+    assert paged_peak > dense_peak, (paged_peak, dense_peak)
+
+
+def test_eviction_and_requeue_on_prediction_undershoot(params):
+    """Predictions say 2 tokens; requests actually run 12 — tables must
+    grow past the reservation, exhaust the pool, evict, requeue, and
+    still finish every request with full-length output."""
+    reqs = _reqs(5, seed=3, short=True)
+    for r in reqs:
+        r.gen_length = 12
+        r.predicted_gen_length = 2           # severe undershoot
+    eng = PagedContinuousEngine(CFG, params=params, max_concurrency=6,
+                                num_blocks=10, block_tokens=8,
+                                max_len=64, max_gen=16)
+    done, _ = _drain(eng, reqs)
+    assert done == len(reqs)
+    assert eng.evictions >= 1, "pool pressure never forced an eviction"
+    for r in reqs:
+        assert len(eng.generated[r.req_id]) == 12
+    # pool fully reclaimed after the storm
+    assert eng.allocator.used_blocks == 1    # just the null block
+
+
+def test_paged_pool_too_small_for_one_request_is_a_memory_error():
+    """A lone request whose generation outgrows the whole pool: no victim
+    to evict, so the engine must fail loudly, not loop."""
+    eng = PagedContinuousEngine(CFG, max_concurrency=2, num_blocks=4,
+                                block_tokens=8, max_len=64, max_gen=32)
+    (r,) = _reqs(1, short=True)     # ~2 blocks of prompt: joins fine
+    r.gen_length = 32
+    r.predicted_gen_length = 1
+    eng.join(r)
+    with pytest.raises(MemoryError):
+        for _ in range(40):
+            eng.step()

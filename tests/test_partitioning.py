@@ -86,6 +86,7 @@ print(json.dumps({{"ok": True,
 """
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["smollm-135m", "olmoe-1b-7b",
                                   "mamba2-780m"])
 def test_mini_dryrun_subprocess(arch):
@@ -130,6 +131,7 @@ print("OK")
 """
 
 
+@pytest.mark.slow
 def test_context_parallel_flash_decode_subprocess():
     """shard_map flash-decode partial-softmax merge is exact vs the
     single-device reference (KV sequence-sharded over 4 model shards)."""

@@ -1,8 +1,12 @@
 """Workload generator + predictor + training substrate tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:          # bare env: seeded fallback (repro.testing)
+    from repro.testing import given, settings
+    from repro.testing import strategies as st
 
 from repro.configs import get_config
 from repro.workload.apps import TASKS, make_dataset, make_request, pearson
