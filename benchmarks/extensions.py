@@ -13,6 +13,10 @@
                     PagedContinuousEngine at the same Θ token budget —
                     concurrency, throughput, pool utilization, evictions
                     (DESIGN.md §8)
+- engine_perf     : decode steps/sec, tokens/sec and host-sync counts for
+                    dense-batch vs per-token paged vs fused-paged decode;
+                    writes ``BENCH_engine.json`` — the perf-trajectory
+                    baseline subsequent PRs regress against (DESIGN.md §9)
 """
 from __future__ import annotations
 
@@ -22,6 +26,8 @@ from typing import List, Tuple
 import numpy as np
 
 Row = Tuple[str, float, str]
+
+BENCH_ENGINE_SCHEMA_VERSION = 1
 
 
 def sens_phi(rates=(12.0,), phis=(5e3, 5e4, 5e5, 5e12),
@@ -209,4 +215,129 @@ def paged_vs_dense(n_requests: int = 12, max_len: int = 128,
                  f"evictions={paged.evictions} "
                  f"mean_util={sum(util) / max(len(util), 1):.3f} "
                  f"theta_tokens={num_blocks * block_tokens}"))
+    return rows
+
+
+def _engine_perf_requests(n_requests: int, max_gen: int):
+    from repro.workload.apps import make_dataset
+    reqs = make_dataset(4, seed=0)[:n_requests]
+    for i, r in enumerate(reqs):
+        # short prompts + uniform full-length targets: a steady-decode
+        # microbench where the per-iteration dispatch overhead (the thing
+        # fusion removes) is the measured quantity
+        r.user_input = " ".join(r.user_input.split()[:6])
+        r.gen_length = max_gen
+        r.predicted_gen_length = r.gen_length
+    return reqs
+
+
+def engine_perf(n_requests: int = 3, max_gen: int = 32, max_len: int = 64,
+                block_tokens: int = 8, repeats: int = 5,
+                out_path: str = "BENCH_engine.json",
+                arch: str = "smollm-135m") -> List[Row]:
+    """Decode-loop dispatch study (ISSUE 2): dense padded batch vs
+    per-token paged vs fused-paged on the reduced smollm-135m CPU config.
+
+    Every engine serves the same request set twice — the first pass warms
+    the (shared) jit caches, the second is timed — so the numbers compare
+    steady-state dispatch, not compilation.  Writes ``out_path`` with a
+    stable schema (see ``BENCH_ENGINE_SCHEMA_VERSION`` and
+    tests/test_bench_schema.py)."""
+    import copy
+    import json
+
+    from repro.configs import get_config
+    from repro.core.types import Batch
+    from repro.serving.engine import (BatchEngine, PagedContinuousEngine,
+                                      drive_paged)
+
+    # d_model=64 and a small batch keep the per-step compute below the
+    # per-iteration dispatch cost, so the decode loop is dispatch-
+    # overhead-bound — the regime the per-token host round-trip actually
+    # hurts in (and the one fusion fixes); at large B the lm_head matmul
+    # dominates and both dispatch styles converge
+    cfg = get_config(arch).reduced(num_layers=2, d_model=64)
+    reqs = _engine_perf_requests(n_requests, max_gen)
+    num_blocks = max(
+        2 * sum(-(-(len(r.user_input) // 3 + r.gen_length) // block_tokens)
+                for r in reqs), 16)
+    engines = {}
+
+    # every row reports a *decode-loop* rate (dense: ServeResult.decode_time
+    # excludes tokenization + prefill) so the three engines are like-for-like
+    dense = BatchEngine(cfg, max_gen=max_gen)
+    dense.serve_batch(Batch(requests=copy.deepcopy(reqs)))    # warm
+    wall, res = float("inf"), None
+    for _ in range(repeats):
+        dense.host_syncs = 0
+        res = dense.serve_batch(Batch(requests=copy.deepcopy(reqs)))
+        wall = min(wall, res.decode_time)
+    engines["dense_batch"] = {
+        "decode_steps": int(res.iterations), "tokens": int(res.valid_tokens),
+        "wall_s": wall, "steps_per_s": res.iterations / max(wall, 1e-9),
+        "tokens_per_s": res.valid_tokens / max(wall, 1e-9),
+        "host_syncs": int(dense.host_syncs),
+        "host_syncs_per_token": dense.host_syncs / max(res.valid_tokens, 1)}
+
+    for name, fuse in (("paged_per_token", False), ("paged_fused", True)):
+        eng = PagedContinuousEngine(
+            cfg, params=dense.params, max_concurrency=n_requests,
+            num_blocks=num_blocks, block_tokens=block_tokens,
+            max_len=max_len, max_gen=max_gen, fuse=fuse)
+        drive_paged(eng, copy.deepcopy(reqs))                 # warm
+        # timed: admit everything first, then time the decode loop alone —
+        # steps/sec is a *decode* dispatch rate, not an admission rate.
+        # Best-of-N to shed scheduler noise (shared-CPU containers).
+        wall, served = float("inf"), 0
+        for _ in range(repeats):
+            batch2 = copy.deepcopy(reqs)
+            admitted = eng.join_many(batch2)
+            if admitted != len(batch2):
+                raise RuntimeError(
+                    f"{name}: only {admitted}/{len(batch2)} requests "
+                    f"admitted — pool sized too small for the workload")
+            eng.host_syncs = eng.decode_steps = 0
+            served = 0
+            t0 = time.perf_counter()
+            while eng.num_active:
+                finished, evicted, _ = eng.step_window()
+                served += len(finished)
+                if evicted:        # would silently shrink the workload
+                    raise RuntimeError(
+                        f"{name}: eviction inside the timed loop — "
+                        f"steady-decode premise violated")
+            wall = min(wall, time.perf_counter() - t0)
+        if served != len(reqs):
+            raise RuntimeError(
+                f"{name}: served {served}/{len(reqs)} — refusing to "
+                f"publish a corrupted BENCH baseline")
+        tokens = sum(min(r.gen_length, max_gen) for r in reqs)
+        engines[name] = {
+            "decode_steps": int(eng.decode_steps), "tokens": int(tokens),
+            "wall_s": wall,
+            "steps_per_s": eng.decode_steps / max(wall, 1e-9),
+            "tokens_per_s": tokens / max(wall, 1e-9),
+            "host_syncs": int(eng.host_syncs),
+            "host_syncs_per_token": eng.host_syncs / max(tokens, 1)}
+
+    speedup = (engines["paged_fused"]["steps_per_s"]
+               / max(engines["paged_per_token"]["steps_per_s"], 1e-9))
+    doc = {"schema_version": BENCH_ENGINE_SCHEMA_VERSION,
+           "config": {"arch": arch, "reduced": True, "d_model": 64,
+                      "num_layers": 2, "n_requests": n_requests,
+                      "max_gen": max_gen, "max_len": max_len,
+                      "block_tokens": block_tokens, "repeats": repeats},
+           "engines": engines,
+           "speedup_fused_vs_per_token": speedup}
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+    rows = [(f"engine_perf/{name}", e["wall_s"] * 1e6,
+             f"steps_per_s={e['steps_per_s']:.1f} "
+             f"tokens_per_s={e['tokens_per_s']:.1f} "
+             f"host_syncs={e['host_syncs']} "
+             f"syncs_per_tok={e['host_syncs_per_token']:.3f}")
+            for name, e in engines.items()]
+    rows.append(("engine_perf/speedup_fused_vs_per_token", 0.0,
+                 f"x{speedup:.2f}"))
     return rows

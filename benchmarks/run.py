@@ -33,6 +33,10 @@ SUITES = {
         duration=20.0 if fast else 40.0),
     "paged": lambda fast: E.paged_vs_dense(
         n_requests=8 if fast else 12),
+    # perf trajectory: dense vs per-token paged vs fused-paged decode;
+    # writes BENCH_engine.json (schema guarded by tests/test_bench_schema.py)
+    "engine": lambda fast: E.engine_perf(
+        max_gen=16 if fast else 32, repeats=3 if fast else 5),
 }
 
 

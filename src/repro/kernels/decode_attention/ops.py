@@ -22,6 +22,23 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
                                    block_k=block_k, interpret=interpret)
 
 
+def paged_decode_attention_impl(q, k_pages, v_pages, block_tables, lengths,
+                                *, use_ref: bool = False):
+    """Un-jitted dispatch for block-table paged decode attention.
+
+    Fused multi-step decode (``models.transformer.decode_multi_paged``)
+    calls this from inside an already-traced ``lax.scan`` body: the jit
+    cache then stays keyed at the *engine's* fused entry point — one
+    entry per (batch shape, pool shape, window length) — instead of
+    paying a nested jit-cache lookup per inner step and per trace.
+    Direct (eager) callers should use :func:`paged_decode_attention`."""
+    if use_ref or jax.devices()[0].platform != "tpu":
+        return paged_decode_attention_ref(q, k_pages, v_pages,
+                                          block_tables, lengths)
+    return paged_decode_attention_kernel(q, k_pages, v_pages, block_tables,
+                                         lengths)
+
+
 @functools.partial(jax.jit, static_argnames=("use_ref",))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
                            use_ref: bool = False):
@@ -29,11 +46,8 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     tables).  ``use_ref`` or any non-TPU backend falls back to the
     gather-based oracle — the Pallas path only pays off when the pool
     lives in HBM and the tables keep the DMA set small."""
-    if use_ref or jax.devices()[0].platform != "tpu":
-        return paged_decode_attention_ref(q, k_pages, v_pages,
-                                          block_tables, lengths)
-    return paged_decode_attention_kernel(q, k_pages, v_pages, block_tables,
-                                         lengths)
+    return paged_decode_attention_impl(q, k_pages, v_pages, block_tables,
+                                       lengths, use_ref=use_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k",))

@@ -64,13 +64,15 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
                              max_concurrency: int = 16) -> dict:
     """Continuous paged serving for real on CPU: MagnusService drives
     admission (prediction + block accounting) against the same
-    BlockAllocator the engine stores KV pages in (DESIGN.md §8)."""
+    BlockAllocator the engine stores KV pages in (DESIGN.md §8).  The
+    engine admits whole scheduler batches through one bucketed prefill
+    (``join_many``) and decodes in fused multi-step windows (§9)."""
     import time
 
     from repro.core.magnus import MagnusConfig, MagnusService
     from repro.core.predictor import GenerationLengthPredictor
     from repro.core.wma import MemoryModel
-    from repro.serving.engine import EngineFull, PagedContinuousEngine
+    from repro.serving.engine import PagedContinuousEngine, drive_paged
     from repro.serving.paged_cache import BlockAllocator
 
     cfg = get_config(arch).reduced()
@@ -86,38 +88,28 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     wl = poisson_workload(rate, duration, seed=seed, max_len=200, max_gen=32)
     for r in wl:
         svc.on_request(r, r.arrival_time)   # prediction + Algorithm-1 acct
-    served = evictions = steps = peak = 0
-    pending, util = [], []
-    start = time.perf_counter()
-    while steps < 100_000:
+
+    def refill(steps: int):
         # admission order comes from the service's scheduler (HRRN for
         # magnus-paged, FCFS for ccb-paged); requests then stream into
-        # the continuous engine until it refuses
-        while True:
-            if not pending:
-                nb = svc.next_batch(now=float(steps))
-                if nb is None:
-                    break
-                pending.extend(nb.requests)
-            try:
-                engine.join(pending[0])
-                pending.pop(0)
-            except EngineFull:
-                break
-        if not pending and not svc.batcher.queue and engine.num_active == 0:
-            break
-        peak = max(peak, engine.num_active)
-        finished, evicted = engine.step()
-        served += len(finished)
-        evictions += len(evicted)
-        pending = evicted + pending          # requeue evicted at the front
-        util.append(engine.utilization())
-        steps += 1
+        # the continuous engine (one batched prefill per wave) until it
+        # refuses
+        nb = svc.next_batch(now=float(steps))
+        return nb.requests if nb is not None else None
+
+    start = time.perf_counter()
+    st = drive_paged(engine, [], max_steps=100_000, refill=refill,
+                     backlog=lambda: len(svc.batcher.queue) > 0)
     wall = time.perf_counter() - start
+    util = st["util"]
     total_tokens = sum(len(g) for g in engine.generated.values())
-    return {"requests": served, "steps": steps, "wall_s": round(wall, 2),
+    return {"requests": st["served"], "steps": st["steps"],
+            "wall_s": round(wall, 2),
             "token_tp": round(total_tokens / max(wall, 1e-9), 1),
-            "peak_concurrency": peak, "evictions": evictions,
+            "peak_concurrency": st["peak"], "evictions": st["evictions"],
+            "host_syncs": engine.host_syncs,
+            "host_syncs_per_token": round(
+                engine.host_syncs / max(total_tokens, 1), 4),
             "mean_block_utilization": round(
                 sum(util) / max(len(util), 1), 3)}
 

@@ -64,6 +64,32 @@ def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, Any], *,
                            act_dtype=act_dtype)
 
 
+def decode_multi(params, cfg: ModelConfig, cache, batch: Dict[str, Any], *,
+                 num_steps: int, rules=None, act_dtype=jnp.bfloat16):
+    """Fused ``num_steps``-step greedy decode against a dense cache.
+
+    batch: {"logits": [B, padded_vocab] seed logits (from prefill or the
+    previous window), "positions": [B]}.  Each scan step argmaxes the
+    carried logits on device and feeds the token straight into the next
+    :func:`decode_step`; logits never leave the device.  Returns
+    ``(logits, cache, positions, tokens [B, num_steps])`` — bit-exact
+    with ``num_steps`` sequential decode_step calls plus host argmax."""
+    mod = encdec if _is_encdec(cfg) else transformer
+
+    def body(carry, _):
+        logits, cache, positions = carry
+        tok = jnp.argmax(logits[:, :cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+        logits, cache = mod.decode_step(params, cfg, cache, tok, positions,
+                                        rules=rules, act_dtype=act_dtype)
+        return (logits, cache, positions + 1), tok
+
+    (logits, cache, positions), toks = jax.lax.scan(
+        body, (batch["logits"], cache, batch["positions"]), None,
+        length=num_steps)
+    return logits, cache, positions, jnp.swapaxes(toks, 0, 1)
+
+
 def supports_paged(cfg: ModelConfig) -> Tuple[bool, str]:
     if _is_encdec(cfg):
         return False, "enc-dec cross-KV caches are not paged"
@@ -83,8 +109,26 @@ def decode_step_paged(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
         batch["block_tables"], rules=rules, act_dtype=act_dtype)
 
 
+def decode_multi_paged(params, cfg: ModelConfig, pages,
+                       batch: Dict[str, Any], *, num_steps: int, rules=None,
+                       act_dtype=jnp.bfloat16):
+    """Fused multi-step paged decode.  batch: {"logits": [B, padded_vocab],
+    "positions": [B], "block_tables": [B, M], "active": [B] bool}.
+    Returns (logits, pages, positions, tokens [B, num_steps])."""
+    return transformer.decode_multi_paged(
+        params, cfg, pages, batch["logits"], batch["positions"],
+        batch["block_tables"], batch["active"], num_steps=num_steps,
+        rules=rules, act_dtype=act_dtype)
+
+
 def write_prefill_pages(pages, kv, table):
     return transformer.write_prefill_pages(pages, kv, table)
+
+
+def write_prefill_pages_batched(pages, kv, tables, *, null_block: int = 0,
+                                pad_to: int = 0):
+    return transformer.write_prefill_pages_batched(
+        pages, kv, tables, null_block=null_block, pad_to=pad_to)
 
 
 def cache_struct(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):

@@ -538,8 +538,11 @@ def _attention_decode_paged(ap: dict, x, cfg: ModelConfig, k_pages, v_pages,
                             block_tables, positions):
     """One-token GQA attention against the shared pool.  The new K/V is
     scattered to (table[pos // bt], pos % bt); attention runs through the
-    block-table kernel (gather oracle off-TPU)."""
-    from repro.kernels.decode_attention.ops import paged_decode_attention
+    block-table kernel (gather oracle off-TPU).  Uses the un-jitted
+    dispatch so fused multi-step callers keep a single jit-cache entry at
+    their own entry point (see kernels.decode_attention.ops)."""
+    from repro.kernels.decode_attention.ops import paged_decode_attention_impl \
+        as paged_decode_attention
     bt = k_pages.shape[1]
     q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
@@ -585,23 +588,90 @@ def decode_step_paged(params, cfg: ModelConfig, pages, tokens, positions,
     return logits, new_pages
 
 
-def write_prefill_pages(pages, kv, table) -> Dict[str, jax.Array]:
-    """Scatter a single-request dense prefill cache (k, v each
-    [L, 1, S, Hkv, D]) into the request's blocks.  ``table`` is the
-    request's (host-side) block-id list; S is clipped/padded to the
-    table capacity — only the first L(p) positions are ever valid."""
-    nb = len(table)
+def decode_multi_paged(params, cfg: ModelConfig, pages, logits, positions,
+                       block_tables, active, *, num_steps: int, rules=None,
+                       act_dtype=jnp.bfloat16):
+    """Fused ``num_steps``-step paged greedy decode (DESIGN.md §9).
+
+    One on-device ``lax.scan``: each step argmaxes the carried logits
+    (the ``[B, padded_vocab]`` tensor never leaves the device), runs
+    :func:`decode_step_paged`, and advances ``positions`` where ``active``
+    (inactive/pad slots keep decoding into the null block at a frozen
+    position).  Emitted tokens stack into one ``[B, num_steps]`` buffer —
+    the only thing the host reads back per window.
+
+    Fusion-window invariant (caller-guaranteed): every active slot has
+    >= ``num_steps`` tokens left to its target AND >= ``num_steps`` free
+    positions in its block table, so no finish / grow / evict event can
+    fall inside the window.
+
+    Returns ``(logits, pages, positions, tokens [B, num_steps])`` —
+    bit-exact with ``num_steps`` sequential :func:`decode_step_paged`
+    calls plus host argmax."""
+    inc = active.astype(positions.dtype)
+
+    def body(carry, _):
+        logits, pages, positions = carry
+        tok = jnp.argmax(logits[:, :cfg.vocab_size],
+                         axis=-1).astype(jnp.int32)
+        logits, pages = decode_step_paged(
+            params, cfg, pages, tok, positions, block_tables,
+            rules=rules, act_dtype=act_dtype)
+        return (logits, pages, positions + inc), tok
+
+    (logits, pages, positions), toks = jax.lax.scan(
+        body, (logits, pages, positions), None, length=num_steps)
+    return logits, pages, positions, jnp.swapaxes(toks, 0, 1)
+
+
+def write_prefill_pages_batched(pages, kv, tables, *, null_block: int = 0,
+                                pad_to: int = 0) -> Dict[str, jax.Array]:
+    """Scatter a batched dense prefill cache (k, v each [L, B, S, Hkv, D])
+    into every request's blocks with ONE scatter per pool.
+
+    ``tables`` is a list of per-request (host-side) block-id lists, one
+    per batch row; short/empty rows pad with ``null_block`` (rows past
+    ``len(tables)`` — prefill-batch bucketing pad — are all-null).  Each
+    row's S is clipped/padded to the common table capacity; positions past
+    a request's prompt length land in its own reserved blocks (masked by
+    ``lengths`` at attention time) or in the null block, never in another
+    request's pages.
+
+    ``pad_to`` fixes the per-row block count (engines pass their
+    ``max_blocks``) so the scatter's shape depends only on the prefill
+    batch/bucket shape — a warmed engine never re-compiles it for a new
+    mix of table lengths (tests/test_recompile.py).
+
+    All-empty tables with ``pad_to=0`` are a no-op — nothing may be
+    scattered anywhere, least of all into physical block 0, which is a
+    perfectly live allocatable block (``null_block`` has no safe
+    default; callers with pad entries must pass their engine's)."""
+    import numpy as np
     bt = pages["k"].shape[2]
-    idx = jnp.asarray(table, jnp.int32)
+    b = kv[0].shape[1]
+    max_nb = max([len(t) for t in tables] + [pad_to])
+    if max_nb == 0:
+        return {"k": pages["k"], "v": pages["v"]}
+    rows = np.full((b, max_nb), null_block, np.int32)
+    for i, t in enumerate(tables):
+        rows[i, :len(t)] = t
+    idx = jnp.asarray(rows.reshape(-1))
 
     def put(pool, c):
-        l, _, s, h, dh = c.shape
-        c = c[:, 0, :min(s, nb * bt)]
-        if c.shape[1] < nb * bt:
-            c = jnp.pad(c, ((0, 0), (0, nb * bt - c.shape[1]),
+        l, bb, s, h, dh = c.shape
+        cap = max_nb * bt
+        c = c[:, :, :min(s, cap)]
+        if c.shape[2] < cap:
+            c = jnp.pad(c, ((0, 0), (0, 0), (0, cap - c.shape[2]),
                             (0, 0), (0, 0)))
-        c = c.reshape(l, nb, bt, h, dh).astype(pool.dtype)
+        c = c.reshape(l, bb * max_nb, bt, h, dh).astype(pool.dtype)
         return pool.at[:, idx].set(c)
 
     k, v = kv
     return {"k": put(pages["k"], k), "v": put(pages["v"], v)}
+
+
+def write_prefill_pages(pages, kv, table) -> Dict[str, jax.Array]:
+    """Single-request convenience wrapper over
+    :func:`write_prefill_pages_batched` (k, v each [L, 1, S, Hkv, D])."""
+    return write_prefill_pages_batched(pages, kv, [list(table)])

@@ -21,6 +21,45 @@ from repro.sim.events import CCBSimulator, ClusterSimulator, Metrics, SimConfig
 from repro.workload.apps import make_dataset
 
 
+class HostSyncCost:
+    """CostModel wrapper pricing the engine's per-iteration host round-trip
+    (ISSUE 2 / DESIGN.md §9).  ``dispatch="per-token"`` pays one sync per
+    decode iteration — the pre-fusion engine; ``dispatch="fused"`` pays one
+    per power-of-two window (``popcount(bg)`` windows for a ``bg``-step
+    batch, mirroring ``PagedContinuousEngine.step_window``'s chunking).
+    With ``host_sync_s=0`` (the default everywhere) this wrapper is never
+    constructed and all sim numbers are unchanged."""
+
+    # continuous-batching iterations can't see the batch end, so fused
+    # windows amortize over a nominal window instead of popcount(bg)
+    NOMINAL_WINDOW = 8
+
+    def __init__(self, base: CostModel, host_sync_s: float,
+                 dispatch: str = "fused"):
+        if dispatch not in ("fused", "per-token"):
+            raise ValueError(f"unknown dispatch {dispatch!r}")
+        self._base = base
+        self.host_sync_s = host_sync_s
+        self.dispatch = dispatch
+
+    def __getattr__(self, name):
+        return getattr(self._base, name)
+
+    def _syncs(self, iters: int) -> int:
+        if self.dispatch == "fused":
+            return bin(max(int(iters), 0)).count("1")
+        return max(int(iters), 0)
+
+    def batch_serving_time(self, beta: int, bl: int, bg: int) -> float:
+        return (self._base.batch_serving_time(beta, bl, bg)
+                + self._syncs(bg) * self.host_sync_s)
+
+    def decode_iter_time(self, n_active: int, ctx: float) -> float:
+        per_iter = (self.host_sync_s / self.NOMINAL_WINDOW
+                    if self.dispatch == "fused" else self.host_sync_s)
+        return self._base.decode_iter_time(n_active, ctx) + per_iter
+
+
 def _estimator_bootstrap(cost: CostModel, memory: MemoryModel,
                          seed: int = 0) -> ServingTimeEstimator:
     """Train the serving-time KNN on synthetic profiled batches (the paper
@@ -43,6 +82,7 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
                  predictor: Optional[GenerationLengthPredictor] = None,
                  train_requests: Optional[List[Request]] = None,
                  kv_dtype_bytes: int = 2,
+                 host_sync_s: float = 0.0, dispatch: str = "fused",
                  seed: int = 0) -> Metrics:
     workload = copy.deepcopy(workload)   # sims mutate finish times
     paged = strategy.endswith("-paged")
@@ -57,6 +97,8 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
             f"{cfg.name} params do not fit a {hw.chips}-chip {hw.name} "
             f"instance; raise HardwareSpec.chips")
     cost = CostModel(cfg, hw, quantized=quant, kv_dtype_bytes=kv_dtype_bytes)
+    if host_sync_s > 0.0:
+        cost = HostSyncCost(cost, host_sync_s, dispatch)
     if strategy == "ccb":
         limit = fixed_batch_size or MemoryModel(
             cfg, hbm_bytes=hw.hbm_bytes * hw.chips,

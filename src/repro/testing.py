@@ -20,6 +20,7 @@ Usage (in test modules)::
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import random
 import types
@@ -27,6 +28,36 @@ from typing import Any, Callable
 
 _DEFAULT_EXAMPLES = 25
 _SEED = 0
+
+
+@contextlib.contextmanager
+def count_compiles():
+    """Count XLA backend compiles inside the block via ``jax.monitoring``
+    (the recompile-audit tier; ISSUE 2).  Yields a dict whose ``"n"`` is
+    incremented once per ``backend_compile`` — cache hits don't fire.
+    Unregisters exactly its own callback on exit (falling back to
+    ``clear_event_listeners`` only if the private unregister API is
+    gone), so nesting and other listeners survive."""
+    from jax import monitoring
+    from jax._src import monitoring as monitoring_impl
+
+    counts = {"n": 0}
+
+    def _on_event(name, *args, **kw):
+        if name == "/jax/core/compile/backend_compile_duration":
+            counts["n"] += 1
+
+    monitoring.register_event_duration_secs_listener(_on_event)
+    try:
+        yield counts
+    finally:
+        unregister = getattr(
+            monitoring_impl,
+            "_unregister_event_duration_listener_by_callback", None)
+        if unregister is not None:
+            unregister(_on_event)
+        else:                                   # pragma: no cover
+            monitoring.clear_event_listeners()
 
 
 class Strategy:

@@ -1,0 +1,50 @@
+"""BENCH_engine.json schema stability (ISSUE 2 satellite): subsequent
+PRs regress against this file, so its shape is pinned here.  The smoke
+run uses a tiny workload — numbers are not asserted (perf assertions
+don't belong in CI), only schema and internal consistency."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.extensions import (BENCH_ENGINE_SCHEMA_VERSION,  # noqa: E402
+                                   engine_perf)
+
+ENGINE_KEYS = {"decode_steps", "tokens", "wall_s", "steps_per_s",
+               "tokens_per_s", "host_syncs", "host_syncs_per_token"}
+ENGINES = {"dense_batch", "paged_per_token", "paged_fused"}
+
+
+@pytest.fixture(scope="module")
+def bench_doc(tmp_path_factory):
+    out = tmp_path_factory.mktemp("bench") / "BENCH_engine.json"
+    engine_perf(n_requests=3, max_gen=4, repeats=1, out_path=str(out))
+    return json.loads(out.read_text())
+
+
+def test_bench_engine_schema_stable(bench_doc):
+    assert bench_doc["schema_version"] == BENCH_ENGINE_SCHEMA_VERSION
+    assert set(bench_doc["engines"]) == ENGINES
+    for name, e in bench_doc["engines"].items():
+        assert set(e) == ENGINE_KEYS, name
+        for k in ENGINE_KEYS:
+            assert isinstance(e[k], (int, float)), (name, k)
+    assert isinstance(bench_doc["speedup_fused_vs_per_token"], float)
+    cfg = bench_doc["config"]
+    for k in ("arch", "n_requests", "max_gen", "max_len", "block_tokens"):
+        assert k in cfg
+
+
+def test_bench_engine_sync_accounting(bench_doc):
+    """Fused must read back strictly fewer times than per-token for the
+    same number of decode steps — the O(1) -> O(1/k) claim, asserted on
+    counts (deterministic), not wall time."""
+    e = bench_doc["engines"]
+    assert e["paged_fused"]["decode_steps"] == \
+        e["paged_per_token"]["decode_steps"]
+    assert e["paged_fused"]["host_syncs"] < e["paged_per_token"]["host_syncs"]
+    assert e["paged_per_token"]["host_syncs"] == \
+        e["paged_per_token"]["decode_steps"]

@@ -37,7 +37,11 @@ def _reqs(n, max_gen=10, seed=0, predicted=True, short=False):
 
 def _drain(engine, pending, max_steps=500):
     """Returns (#finished, peak concurrency) via the canonical loop."""
+    n = len(pending)
     stats = drive_paged(engine, pending, max_steps=max_steps)
+    if engine.fuse and stats["served"] == n and n > 0:
+        # fused windows: strictly fewer readbacks than decode iterations
+        assert stats["host_syncs"] <= stats["steps"]
     return stats["served"], stats["peak"]
 
 

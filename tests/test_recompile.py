@@ -1,0 +1,83 @@
+"""Recompilation audit (ISSUE 2 satellite): single-request joins bucket
+prompt pads via ``_bucket``, so before warmup every fresh bucket compiled
+a new prefill mid-serve.  ``PagedContinuousEngine(warmup=True)`` now
+pre-compiles the whole (batch-bucket × prompt-bucket) prefill grid and
+every power-of-two fused-decode window; a mixed-length workload must then
+trigger ZERO mid-serve XLA compiles.
+
+Compile counting uses ``jax.monitoring`` backend-compile events
+(``repro.testing.count_compiles``) plus the jitted entry points'
+``_cache_size()`` (compilation-cache hook) for attribution.
+"""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.engine import PagedContinuousEngine, drive_paged
+from repro.testing import count_compiles
+from repro.workload.apps import make_dataset
+
+CFG = get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _mixed(n, seed, max_gen, word_counts, undershoot=False):
+    """Requests with deliberately varied prompt lengths (different pad
+    buckets) and generation targets (different window sizes).
+    ``undershoot`` under-predicts so the serve exercises mid-serve table
+    grows — the prediction-error path must be compile-free too."""
+    reqs = make_dataset(3, seed=seed)[:n]
+    for i, r in enumerate(reqs):
+        words = r.user_input.split() * 8
+        r.user_input = " ".join(words[:word_counts[i % len(word_counts)]])
+        r.gen_length = 1 + (seed + i * 5) % max_gen
+        r.predicted_gen_length = 1 if undershoot else r.gen_length
+    return reqs
+
+
+def test_warmed_engine_serves_mixed_lengths_without_recompiles(params):
+    eng = PagedContinuousEngine(CFG, params=params, max_concurrency=4,
+                                num_blocks=64, block_tokens=8,
+                                max_len=64, max_gen=8, warmup=True)
+    p0 = eng._prefill._cache_size()
+    d0 = eng._decode_multi._cache_size()
+    # first serve: exercises the remaining eager update paths (uniform
+    # shapes by construction, so they compile here, once)
+    stats = drive_paged(eng, _mixed(6, seed=1, max_gen=8,
+                                    word_counts=(2, 9, 30)))
+    assert stats["served"] == 6
+    # warmup already covered every prefill/window shape the serve needed
+    assert eng._prefill._cache_size() == p0
+    assert eng._decode_multi._cache_size() == d0
+    # second serve: *different* prompt lengths and targets, same buckets,
+    # under-predicted lengths (mid-serve table grows) — the regression
+    # this test pins down is "no compile mid-serve", prediction errors
+    # included
+    with count_compiles() as c:
+        stats = drive_paged(eng, _mixed(6, seed=4, max_gen=8,
+                                        word_counts=(4, 14, 55),
+                                        undershoot=True))
+    assert stats["served"] == 6
+    assert c["n"] == 0, f"{c['n']} XLA compiles during a warmed serve"
+    assert eng._prefill._cache_size() == p0
+    assert eng._decode_multi._cache_size() == d0
+
+
+def test_warmup_is_idempotent_and_bounded(params):
+    """Re-running warmup adds no cache entries, and the jit cache stays
+    O(batch buckets × prompt buckets) + O(log max_gen)."""
+    eng = PagedContinuousEngine(CFG, params=params, max_concurrency=4,
+                                num_blocks=64, block_tokens=8,
+                                max_len=64, max_gen=8, warmup=True)
+    p0 = eng._prefill._cache_size()
+    d0 = eng._decode_multi._cache_size()
+    with count_compiles() as c:
+        eng.warmup()
+    assert c["n"] == 0
+    assert eng._prefill._cache_size() == p0
+    assert eng._decode_multi._cache_size() == d0
