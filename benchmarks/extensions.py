@@ -17,6 +17,13 @@
                     dense-batch vs per-token paged vs fused-paged decode;
                     writes ``BENCH_engine.json`` — the perf-trajectory
                     baseline subsequent PRs regress against (DESIGN.md §9)
+- prefix_cache    : prefix-hit sweep (hit-rate 0 / 0.5 / 1.0 over
+                    shared-instruction app mixes): suffix-only prefill
+                    against ref-counted shared instruction pages vs the
+                    no-cache paged baseline — prefill wall-time and
+                    admitted-concurrency at equal Θ (DESIGN.md §10);
+                    writes a ``prefix_cache`` section into
+                    ``BENCH_engine.json``
 """
 from __future__ import annotations
 
@@ -27,7 +34,7 @@ import numpy as np
 
 Row = Tuple[str, float, str]
 
-BENCH_ENGINE_SCHEMA_VERSION = 1
+BENCH_ENGINE_SCHEMA_VERSION = 2
 
 
 def sens_phi(rates=(12.0,), phis=(5e3, 5e4, 5e5, 5e12),
@@ -218,6 +225,178 @@ def paged_vs_dense(n_requests: int = 12, max_len: int = 128,
     return rows
 
 
+def prefix_cache_sweep(n_requests: int = 8, instr_words: int = 111,
+                       input_words: int = 15, gen_length: int = 4,
+                       block_tokens: int = 8, repeats: int = 3,
+                       out_path: str = "BENCH_engine.json",
+                       arch: str = "smollm-135m") -> List[Row]:
+    """Prefix-hit sweep (DESIGN.md §10): admission wall-time and admitted
+    concurrency with the ref-counted instruction-prefix cache vs the
+    no-cache paged baseline, at hit rates 0 / 0.5 / 1.0.
+
+    The workload is the LMaaS shape the paper serves — ``instruction +
+    user_input`` with a long fixed per-app template (few-shot prompts,
+    style guides) and short fresh inputs.  A hit prefills only the
+    suffix (here a 16-token bucket instead of the full 128-token prompt
+    bucket) and claims only suffix + predicted-gen blocks, so both
+    prefill tokens/s and concurrency-at-equal-Θ rise with the hit rate.
+    Timed engines are warmed (untimed first pass per sweep point);
+    best-of-``repeats`` sheds scheduler noise.  Merges a ``prefix_cache``
+    section into ``out_path`` (schema v2, tests/test_bench_schema.py)."""
+    import copy
+    import json
+    import os
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.serving.engine import PagedContinuousEngine
+    from repro.workload.apps import make_shared_prefix_dataset
+
+    cfg = get_config(arch).reduced(num_layers=2, d_model=128)
+    prompt_tokens = instr_words + 1 + input_words
+    full_blocks = -(-(prompt_tokens + gen_length) // block_tokens)
+    prefix_blocks = (instr_words + 1) // block_tokens
+    hit_new_blocks = full_blocks - prefix_blocks
+    max_len = prompt_tokens + 1
+    max_gen = max(gen_length, 2)
+
+    def _workload(hit_rate: float, seed: int):
+        n_hit = round(hit_rate * n_requests)
+        hits = make_shared_prefix_dataset(
+            n_hit, n_apps=1, instr_words=instr_words,
+            input_words=input_words, gen_length=gen_length, seed=0)
+        misses = make_shared_prefix_dataset(
+            n_requests - n_hit, n_apps=max(n_requests - n_hit, 1),
+            instr_words=instr_words, input_words=input_words,
+            gen_length=gen_length, seed=seed)
+        return hits + misses
+
+    warm_req = make_shared_prefix_dataset(
+        1, n_apps=1, instr_words=instr_words, input_words=input_words,
+        gen_length=gen_length, seed=0)      # app 0: the shared template
+
+    def _drain(eng):
+        while eng.num_active:
+            finished, evicted, _ = eng.step_window()
+            if evicted:
+                raise RuntimeError("eviction during a prefix-cache sweep "
+                                   "drain — pool sized too small")
+
+    def _fresh(cache: bool, num_blocks: int, params=None):
+        eng = PagedContinuousEngine(
+            cfg, params=params, max_concurrency=n_requests,
+            num_blocks=num_blocks, block_tokens=block_tokens,
+            max_len=max_len, max_gen=max_gen, prefix_cache=cache)
+        # publish app 0's prefix (cache side) / warm the jit shapes (both)
+        if eng.join_many(copy.deepcopy(warm_req)) != 1:
+            raise RuntimeError("warm request refused")
+        _drain(eng)
+        return eng
+
+    def _keep_only_app0(eng):
+        """Reset cache contents between repeats: miss templates published
+        in repeat r must not turn into hits in repeat r+1."""
+        pc = eng.prefix_cache
+        if pc is None:
+            return
+        key0 = eng._prefix_key(warm_req[0], eng._prompt_ids(warm_req[0]))
+        keep = pc.entries.get(key0)
+        if keep is not None:
+            pc.pin(keep)
+        pc.evict_until(10 ** 9)             # clears every unpinned entry
+        if keep is not None:
+            pc.unpin(keep)
+
+    # pool for the timed runs: generous, so hit-0 publishing never churns
+    timing_blocks = 1 + (n_requests + 1) * prefix_blocks \
+        + n_requests * full_blocks
+    params = None
+    sweeps = {}
+    for hit_rate in (0.0, 0.5, 1.0):
+        walls = {True: float("inf"), False: float("inf")}
+        hits = misses = 0
+        for cache in (False, True):
+            eng = _fresh(cache, timing_blocks, params)
+            params = eng.params
+            _keep_only_app0(eng)
+            warm = _workload(hit_rate, seed=999)
+            if eng.join_many(copy.deepcopy(warm)) != n_requests:
+                raise RuntimeError("warm wave refused — pool too small")
+            _drain(eng)
+            _keep_only_app0(eng)
+            for rep in range(repeats):
+                wl = _workload(hit_rate, seed=1000 + rep)
+                if eng.prefix_cache is not None:
+                    eng.prefix_cache.hits = eng.prefix_cache.misses = 0
+                batch = copy.deepcopy(wl)
+                t0 = time.perf_counter()
+                admitted = eng.join_many(batch)
+                jax.block_until_ready((eng.logits, eng.pages))
+                walls[cache] = min(walls[cache], time.perf_counter() - t0)
+                if admitted != n_requests:
+                    raise RuntimeError(
+                        f"only {admitted}/{n_requests} admitted in a "
+                        f"timed wave — refusing to publish")
+                if eng.prefix_cache is not None:
+                    hits, misses = (eng.prefix_cache.hits,
+                                    eng.prefix_cache.misses)
+                _drain(eng)
+                _keep_only_app0(eng)
+        tokens = n_requests * prompt_tokens
+        sweeps[f"{hit_rate:g}"] = {
+            "prefill_wall_s": walls[True],
+            "prefill_tokens_per_s": tokens / max(walls[True], 1e-9),
+            "baseline_wall_s": walls[False],
+            "baseline_tokens_per_s": tokens / max(walls[False], 1e-9),
+            "speedup_vs_baseline": walls[False] / max(walls[True], 1e-9),
+            "hits": int(hits), "misses": int(misses)}
+
+    # admitted concurrency at equal Θ: a tight pool where a full-prompt
+    # reservation admits few, suffix-only reservations admit everything
+    tight_blocks = 1 + prefix_blocks + 3 * full_blocks
+    wl = _workload(1.0, seed=2000)
+    conc = {}
+    for cache in (False, True):
+        eng = _fresh(cache, tight_blocks, params)
+        conc[cache] = eng.join_many(copy.deepcopy(wl))
+        _drain(eng)
+    section = {
+        "config": {"arch": arch, "reduced": True, "d_model": 128,
+                   "num_layers": 2, "n_requests": n_requests,
+                   "instr_words": instr_words, "input_words": input_words,
+                   "gen_length": gen_length, "block_tokens": block_tokens,
+                   "repeats": repeats, "prefix_blocks": prefix_blocks,
+                   "full_blocks_per_request": full_blocks,
+                   "hit_new_blocks": hit_new_blocks,
+                   "tight_pool_blocks": tight_blocks},
+        "hit_rates": sweeps,
+        "speedup_at_hit1": sweeps["1"]["speedup_vs_baseline"],
+        "admitted_with_cache": int(conc[True]),
+        "admitted_no_cache": int(conc[False]),
+        "concurrency_gain_at_equal_theta":
+            conc[True] / max(conc[False], 1)}
+    if out_path:
+        doc = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                doc = json.load(f)
+        doc["schema_version"] = BENCH_ENGINE_SCHEMA_VERSION
+        doc["prefix_cache"] = section
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+    rows = [(f"prefix_cache/hit{hr}", s["prefill_wall_s"] * 1e6,
+             f"tok_per_s={s['prefill_tokens_per_s']:.0f} "
+             f"base_tok_per_s={s['baseline_tokens_per_s']:.0f} "
+             f"speedup=x{s['speedup_vs_baseline']:.2f} "
+             f"hits={s['hits']} misses={s['misses']}")
+            for hr, s in sweeps.items()]
+    rows.append(("prefix_cache/concurrency_equal_theta", 0.0,
+                 f"cached={conc[True]} baseline={conc[False]} "
+                 f"gain=x{section['concurrency_gain_at_equal_theta']:.2f}"))
+    return rows
+
+
 def _engine_perf_requests(n_requests: int, max_gen: int):
     from repro.workload.apps import make_dataset
     reqs = make_dataset(4, seed=0)[:n_requests]
@@ -330,6 +509,10 @@ def engine_perf(n_requests: int = 3, max_gen: int = 32, max_len: int = 64,
            "engines": engines,
            "speedup_fused_vs_per_token": speedup}
     if out_path:
+        import os
+        if os.path.exists(out_path):      # keep sibling suites' sections
+            with open(out_path) as f:
+                doc = {**json.load(f), **doc}
         with open(out_path, "w") as f:
             json.dump(doc, f, indent=2, sort_keys=True)
     rows = [(f"engine_perf/{name}", e["wall_s"] * 1e6,

@@ -37,6 +37,10 @@ SUITES = {
     # writes BENCH_engine.json (schema guarded by tests/test_bench_schema.py)
     "engine": lambda fast: E.engine_perf(
         max_gen=16 if fast else 32, repeats=3 if fast else 5),
+    # prefix-cache hit sweep: suffix-only prefill vs full re-prefill;
+    # merges the prefix_cache section into BENCH_engine.json
+    "prefix": lambda fast: E.prefix_cache_sweep(
+        repeats=2 if fast else 3),
 }
 
 

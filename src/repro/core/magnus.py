@@ -25,7 +25,8 @@ from repro.core.predictor import GenerationLengthPredictor, PredictorConfig
 from repro.core.scheduler import FCFSScheduler, HRRNScheduler
 from repro.core.types import Batch, Request
 from repro.core.wma import MemoryModel
-from repro.serving.paged_cache import BlockAllocator, PagedMemoryModel
+from repro.serving.paged_cache import (BlockAllocator, PagedMemoryModel,
+                                       PrefixCache)
 
 STRATEGIES = ("vs", "vsq", "ccb", "glp", "abp", "magnus",
               "ccb-paged", "magnus-paged")
@@ -38,6 +39,10 @@ class MagnusConfig:
     fixed_batch_size: Optional[int] = None  # None => Eq. (1) for vs/vsq/glp
     continuous_learning: bool = True
     block_tokens: int = 16              # paged strategies: tokens per block
+    # paged strategies: per-app instruction prefixes share ref-counted
+    # pages (DESIGN.md §10); Algorithm-1 footprints charge each distinct
+    # template once, mirroring the runtime's PrefixCache
+    prefix_sharing: bool = False
 
 
 class MagnusService:
@@ -70,10 +75,18 @@ class MagnusService:
                 nb = max(1, memory.theta
                          // (memory.block_tokens * memory.base.delta))
                 self.allocator = BlockAllocator(nb, memory.block_tokens)
-            # planning Θ = the pool the runtime allocates from
-            memory = dataclasses.replace(memory, block_tokens=bt,
-                                         allocator=self.allocator)
+            # planning Θ = the pool the runtime allocates from; with
+            # prefix sharing the batcher charges each distinct
+            # instruction template's pages once (hit-aware footprints)
+            memory = dataclasses.replace(
+                memory, block_tokens=bt, allocator=self.allocator,
+                prefix_sharing=self.cfg.prefix_sharing)
         self.memory = memory
+        # the runtime engine binds to this same index so planning and
+        # serving agree on which prefixes are resident
+        self.prefix_cache = (PrefixCache(self.allocator)
+                             if self.paged and self.cfg.prefix_sharing
+                             else None)
         # paged admission reserves per-request *predicted* blocks, so every
         # paged strategy needs the predictor (ccb-paged included)
         self.uses_prediction = base in ("glp", "abp", "magnus") or self.paged

@@ -150,6 +150,138 @@ def _paged_kernel(tables_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
                        ).astype(o_ref.dtype)
 
 
+def _prefix_prefill_kernel(tables_ref, plen_ref, slen_ref, q_ref, ks_ref,
+                           vs_ref, kp_ref, vp_ref, o_ref, acc_ref, m_ref,
+                           l_ref, *, block_tokens: int, g: int, scale: float):
+    """Prefix-aware suffix-prefill attention: grid (B, Hkv, MB + 1).
+
+    Steps ``ji < MB`` stream the request's cached *prefix* pages, gathered
+    physically through the scalar-prefetched ``tables_ref`` exactly like
+    the paged decode kernel; the final step processes the new *suffix*
+    K/V.  All suffix queries of one (batch, kv-head) pair ride together
+    as a ``[S*G, D]`` MXU tile with online-softmax accumulators in VMEM —
+    every prefix position is valid for every suffix query (strictly
+    earlier in the timeline), causality only bites within the suffix."""
+    bi = pl.program_id(0)
+    ji = pl.program_id(2)
+    nj = pl.num_programs(2)
+    mb = nj - 1                       # prefix steps; last step = suffix
+
+    @pl.when(ji == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    plen = plen_ref[bi]
+    slen = slen_ref[bi]
+    k_start = ji * block_tokens
+
+    def _update(s):
+        m_prev, l_prev = m_ref[:, 0], l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_prev * alpha + p.sum(axis=1)
+        m_ref[:, 0] = m_new
+        return p, alpha
+
+    @pl.when((ji < mb) & (k_start < plen))
+    def _prefix_block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # [S*G, D]
+        k = kp_ref[0, :, 0].astype(jnp.float32)             # [bt, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < plen, s, NEG_INF)
+        p, alpha = _update(s)
+        pv = jax.lax.dot_general(p, vp_ref[0, :, 0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ji == mb)
+    def _suffix_block():
+        q = q_ref[0, 0].astype(jnp.float32) * scale         # [S*G, D]
+        k = ks_ref[0, 0].astype(jnp.float32)                # [S, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        q_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+        k_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((k_idx <= q_idx) & (k_idx < slen), s, NEG_INF)
+        p, alpha = _update(s)
+        pv = jax.lax.dot_general(p, vs_ref[0, 0].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ji == nj - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[:, 0], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def paged_prefix_prefill_attention_kernel(
+        q: jax.Array, k_suf: jax.Array, v_suf: jax.Array,
+        k_pages: jax.Array, v_pages: jax.Array, block_tables: jax.Array,
+        prefix_lens: jax.Array, suffix_lens: jax.Array, *,
+        interpret: bool = False) -> jax.Array:
+    """q, k_suf, v_suf: [B, S, H*, D] suffix tensors (rope'd at absolute
+    positions); pages: [num_blocks, block_tokens, Hkv, D];
+    block_tables: [B, MB] physical ids of each request's prefix pages
+    (pad entries must be valid ids — masked but still indexed);
+    prefix_lens/suffix_lens: [B] -> [B, S, Hq, D]."""
+    b, s, hq, d = q.shape
+    _, bt, hkv, _ = k_pages.shape
+    mb = block_tables.shape[1]
+    g = hq // hkv
+
+    qt = q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, hkv, s * g, d)
+    kt = k_suf.transpose(0, 2, 1, 3)                        # [B, Hkv, S, D]
+    vt = v_suf.transpose(0, 2, 1, 3)
+    grid = (b, hkv, mb + 1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, s * g, d),
+                         lambda bi, hi, ji, tables, pl_, sl: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d),
+                         lambda bi, hi, ji, tables, pl_, sl: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d),
+                         lambda bi, hi, ji, tables, pl_, sl: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bt, 1, d),
+                         lambda bi, hi, ji, tables, pl_, sl:
+                         (tables[bi, jnp.minimum(ji, tables.shape[1] - 1)],
+                          0, hi, 0)),
+            pl.BlockSpec((1, bt, 1, d),
+                         lambda bi, hi, ji, tables, pl_, sl:
+                         (tables[bi, jnp.minimum(ji, tables.shape[1] - 1)],
+                          0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s * g, d),
+                               lambda bi, hi, ji, tables, pl_, sl:
+                               (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((s * g, d), jnp.float32),
+            pltpu.VMEM((s * g, 1), jnp.float32),
+            pltpu.VMEM((s * g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_prefix_prefill_kernel, block_tokens=bt, g=g,
+                          scale=d ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, s * g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), prefix_lens.astype(jnp.int32),
+      suffix_lens.astype(jnp.int32), qt, kt, vt, k_pages, v_pages)
+    return out.reshape(b, hkv, s, g, d).transpose(0, 2, 1, 3, 4) \
+        .reshape(b, s, hq, d)
+
+
 def paged_decode_attention_kernel(q: jax.Array, k_pages: jax.Array,
                                   v_pages: jax.Array, block_tables: jax.Array,
                                   lengths: jax.Array, *,

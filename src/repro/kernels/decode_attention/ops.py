@@ -7,9 +7,10 @@ import jax
 
 from repro.kernels.decode_attention.kernel import (
     decode_attention_int8_kernel, decode_attention_kernel,
-    paged_decode_attention_kernel)
+    paged_decode_attention_kernel, paged_prefix_prefill_attention_kernel)
 from repro.kernels.decode_attention.ref import (
-    decode_attention_ref, paged_decode_attention_ref)
+    decode_attention_ref, paged_decode_attention_ref,
+    paged_prefix_prefill_attention_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "use_ref"))
@@ -48,6 +49,38 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
     lives in HBM and the tables keep the DMA set small."""
     return paged_decode_attention_impl(q, k_pages, v_pages, block_tables,
                                        lengths, use_ref=use_ref)
+
+
+def paged_prefix_prefill_attention_impl(q, k_suf, v_suf, k_pages, v_pages,
+                                        block_tables, prefix_lens,
+                                        suffix_lens, *,
+                                        use_ref: bool = False):
+    """Un-jitted dispatch for prefix-aware suffix-prefill attention.
+
+    Called from inside the already-traced ``models.transformer``
+    suffix-prefill layer scan (same rationale as
+    :func:`paged_decode_attention_impl`: the jit cache stays keyed at the
+    engine's entry point).  Direct callers should use
+    :func:`paged_prefix_prefill_attention`."""
+    if use_ref or jax.devices()[0].platform != "tpu":
+        return paged_prefix_prefill_attention_ref(
+            q, k_suf, v_suf, k_pages, v_pages, block_tables, prefix_lens,
+            suffix_lens)
+    return paged_prefix_prefill_attention_kernel(
+        q, k_suf, v_suf, k_pages, v_pages, block_tables, prefix_lens,
+        suffix_lens)
+
+
+@functools.partial(jax.jit, static_argnames=("use_ref",))
+def paged_prefix_prefill_attention(q, k_suf, v_suf, k_pages, v_pages,
+                                   block_tables, prefix_lens, suffix_lens,
+                                   *, use_ref: bool = False):
+    """Suffix-prefill attention against cached prefix pages (shared
+    instruction KV; per-request tables).  ``use_ref`` or any non-TPU
+    backend falls back to the gather-based oracle."""
+    return paged_prefix_prefill_attention_impl(
+        q, k_suf, v_suf, k_pages, v_pages, block_tables, prefix_lens,
+        suffix_lens, use_ref=use_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k",))

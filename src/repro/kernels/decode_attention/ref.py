@@ -22,6 +22,46 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
     return decode_attention_ref(q, k, v, lengths)
 
 
+def paged_prefix_prefill_attention_ref(
+        q: jax.Array, k_suf: jax.Array, v_suf: jax.Array,
+        k_pages: jax.Array, v_pages: jax.Array, block_tables: jax.Array,
+        prefix_lens: jax.Array, suffix_lens: jax.Array) -> jax.Array:
+    """Gather-based oracle for suffix prefill against cached prefix pages.
+
+    q, k_suf, v_suf: [B, S, H*, D] — the *suffix* tokens only, already
+    rope'd at absolute positions ``prefix_lens[b] + i``; the pages hold
+    the prefix KV at positions ``[0, prefix_lens[b])`` (written by an
+    earlier instruction prefill).  ``block_tables`` [B, M] gathers the
+    pages into a dense prefix view; each suffix query attends every valid
+    prefix position (all strictly earlier) plus the suffix causally:
+    score(q_i, k_j) is masked unless ``j < prefix_lens[b]`` (prefix part)
+    or ``j - P <= i`` and ``j - P < suffix_lens[b]`` (suffix part, P the
+    gathered prefix capacity).  Returns [B, S, Hq, D]."""
+    b, s, hq, d = q.shape
+    _, bt, hkv, _ = k_pages.shape
+    g = hq // hkv
+    kp = k_pages[block_tables].reshape(b, -1, hkv, d)
+    vp = v_pages[block_tables].reshape(b, -1, hkv, d)
+    p_cap = kp.shape[1]
+    k_cat = jnp.concatenate([kp, k_suf], axis=1).astype(jnp.float32)
+    v_cat = jnp.concatenate([vp, v_suf], axis=1).astype(jnp.float32)
+    q_idx = jnp.arange(s)
+    kv_idx = jnp.arange(p_cap + s)
+    in_prefix = kv_idx < p_cap
+    prefix_ok = kv_idx[None, :] < prefix_lens[:, None]            # [B, K]
+    suffix_ok = ((kv_idx[None, None, :] - p_cap <= q_idx[None, :, None])
+                 & (kv_idx[None, :] - p_cap
+                    < suffix_lens[:, None])[:, None, :])          # [B, S, K]
+    mask = jnp.where(in_prefix[None, None, :],
+                     prefix_ok[:, None, :], suffix_ok)            # [B, S, K]
+    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, s, hkv, g, d)
+    sc = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k_cat)
+    sc = jnp.where(mask[:, :, None, None, :], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v_cat)
+    return o.reshape(b, s, hq, d).astype(q.dtype)
+
+
 def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
                          v_cache: jax.Array, lengths: jax.Array) -> jax.Array:
     """q: [B, Hq, D]; caches: [B, S, Hkv, D]; lengths: [B] -> [B, Hq, D]."""

@@ -61,12 +61,15 @@ def run_engine_backend(arch: str, rate: float, duration: float,
 def run_paged_engine_backend(arch: str, rate: float, duration: float,
                              strategy: str, seed: int = 0, *,
                              num_blocks: int = 128, block_tokens: int = 16,
-                             max_concurrency: int = 16) -> dict:
+                             max_concurrency: int = 16,
+                             prefix_cache: bool = False) -> dict:
     """Continuous paged serving for real on CPU: MagnusService drives
     admission (prediction + block accounting) against the same
     BlockAllocator the engine stores KV pages in (DESIGN.md §8).  The
     engine admits whole scheduler batches through one bucketed prefill
-    (``join_many``) and decodes in fused multi-step windows (§9)."""
+    (``join_many``) and decodes in fused multi-step windows (§9).  With
+    ``prefix_cache`` the service's hit-aware footprints and the engine's
+    ref-counted shared instruction pages use ONE PrefixCache (§10)."""
     import time
 
     from repro.core.magnus import MagnusConfig, MagnusService
@@ -80,11 +83,14 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     allocator = BlockAllocator(num_blocks, block_tokens)
     predictor = GenerationLengthPredictor(seed=seed).fit(
         make_dataset(60, seed=seed + 1))
-    svc = MagnusService(memory, MagnusConfig(strategy=strategy),
+    svc = MagnusService(memory,
+                        MagnusConfig(strategy=strategy,
+                                     prefix_sharing=prefix_cache),
                         predictor=predictor, allocator=allocator)
     engine = PagedContinuousEngine(cfg, max_concurrency=max_concurrency,
                                    max_len=200, max_gen=32,
-                                   allocator=allocator)
+                                   allocator=allocator,
+                                   prefix_cache=svc.prefix_cache or False)
     wl = poisson_workload(rate, duration, seed=seed, max_len=200, max_gen=32)
     for r in wl:
         svc.on_request(r, r.arrival_time)   # prediction + Algorithm-1 acct
@@ -107,6 +113,10 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
             "wall_s": round(wall, 2),
             "token_tp": round(total_tokens / max(wall, 1e-9), 1),
             "peak_concurrency": st["peak"], "evictions": st["evictions"],
+            "prefix_hits": engine.prefix_cache.hits
+            if engine.prefix_cache else 0,
+            "prefix_misses": engine.prefix_cache.misses
+            if engine.prefix_cache else 0,
             "host_syncs": engine.host_syncs,
             "host_syncs_per_token": round(
                 engine.host_syncs / max(total_tokens, 1), 4),
@@ -125,14 +135,26 @@ def main() -> None:
     ap.add_argument("--instances", type=int, default=7)
     ap.add_argument("--backend", default="sim", choices=["sim", "engine"])
     ap.add_argument("--hw", default="v100", choices=["v100", "v5e"])
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="paged strategies: share per-app instruction KV "
+                         "pages (runtime) / hit-aware footprints (sim)")
+    ap.add_argument("--block-tokens", type=int, default=16,
+                    help="paged engine block size; only *full* blocks of "
+                         "instruction tokens are shareable, so short app "
+                         "templates need a smaller block to hit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.backend == "engine":
-        run = (run_paged_engine_backend if args.strategy.endswith("-paged")
-               else run_engine_backend)
-        out = run(args.arch, args.rate, args.duration,
-                  args.strategy, args.seed)
+        if args.strategy.endswith("-paged"):
+            out = run_paged_engine_backend(args.arch, args.rate,
+                                           args.duration, args.strategy,
+                                           args.seed,
+                                           block_tokens=args.block_tokens,
+                                           prefix_cache=args.prefix_cache)
+        else:
+            out = run_engine_backend(args.arch, args.rate, args.duration,
+                                     args.strategy, args.seed)
         print(json.dumps(out, indent=2))
         return
     cfg = get_config(args.arch)
@@ -142,6 +164,7 @@ def main() -> None:
                      n_instances=args.instances,
                      kv_dtype_bytes=4 if args.hw == "v100" else 2,
                      train_requests=make_dataset(100, seed=args.seed + 1),
+                     prefix_sharing=args.prefix_cache,
                      seed=args.seed)
     print(json.dumps(m.summary(), indent=2))
 

@@ -101,6 +101,18 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_tokens: int,
     return transformer.init_paged_cache(cfg, num_blocks, block_tokens, dtype)
 
 
+def prefill_suffix(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
+                   *, rules=None, act_dtype=jnp.bfloat16):
+    """Suffix-only prefill against cached prefix pages (paged families
+    only).  batch: {"tokens": [B, S] suffix ids, "lengths": [B] valid
+    suffix counts, "prefix_lens": [B] cached full-block prefix tokens,
+    "block_tables": [B, M]}.  Returns (logits [B, V], suffix kv)."""
+    return transformer.prefill_suffix(
+        params, cfg, pages, batch["tokens"], batch["lengths"],
+        batch["prefix_lens"], batch["block_tables"], rules=rules,
+        act_dtype=act_dtype)
+
+
 def decode_step_paged(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
                       *, rules=None, act_dtype=jnp.bfloat16):
     """batch: {"tokens": [B], "positions": [B], "block_tables": [B, M]}."""

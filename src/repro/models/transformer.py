@@ -563,6 +563,69 @@ def _attention_decode_paged(ap: dict, x, cfg: ModelConfig, k_pages, v_pages,
             {"k": k_pages, "v": v_pages})
 
 
+def _attention_prefill_suffix(ap: dict, x, cfg: ModelConfig, k_pages,
+                              v_pages, block_tables, prefix_lens,
+                              suffix_lens):
+    """Suffix-token GQA attention against cached prefix pages + the new
+    suffix K/V (DESIGN.md §10).  Queries sit at absolute positions
+    ``prefix_lens[b] + i``; the prefix KV (positions ``< prefix_lens[b]``)
+    is gathered through the block table, so the shared pages are read,
+    never re-computed.  Returns (out, (k_suf, v_suf)) — the suffix K/V is
+    the request's *private* cache slice, scattered into its own blocks by
+    the caller."""
+    from repro.kernels.decode_attention.ops import \
+        paged_prefix_prefill_attention_impl as prefix_attention
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + ap["bq"], k + ap["bk"], v + ap["bv"]
+    positions = prefix_lens[:, None] + jnp.arange(s)[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = prefix_attention(q, k, v, k_pages, v_pages, block_tables,
+                           prefix_lens, suffix_lens)
+    return (jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), ap["wo"]),
+            (k, v))
+
+
+def prefill_suffix(params, cfg: ModelConfig, pages, tokens, lengths,
+                   prefix_lens, block_tables, *, rules=None,
+                   act_dtype=jnp.bfloat16):
+    """Suffix-only prefill against cached prefix pages.
+
+    tokens: [B, S] *suffix* ids (the prompt minus its cached full-block
+    instruction prefix, right-padded); lengths: [B] valid suffix counts;
+    prefix_lens: [B] cached prefix tokens (full-block multiples);
+    block_tables: [B, M] — the request's table, shared prefix pages
+    first (beyond-prefix entries are gathered but masked).
+
+    Returns (next-token logits [B, V], suffix KV (k, v) each
+    [L, B, S, Hkv, D]) — same contract as :func:`prefill`, computing only
+    ``S_suffix`` token positions instead of the full prompt."""
+    params = cast_params(params, act_dtype)
+    x = _embed_in(params, cfg, tokens, None, act_dtype)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), rules)
+
+    def body(h, xs):
+        bp, page_l = xs
+        hh = rms_norm(h, bp["norm1"], cfg.norm_eps)
+        y, kv = _attention_prefill_suffix(
+            bp["attn"], hh, cfg, page_l["k"], page_l["v"], block_tables,
+            prefix_lens, lengths)
+        h = h + y
+        h, _ = _ffn(bp, h, cfg, rules)
+        h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules)
+        return h, kv
+
+    x, kv = jax.lax.scan(body, x, (params["blocks"], pages))
+    logits = _logits(params, cfg, x, rules)
+    last = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+    return last, kv
+
+
 def decode_step_paged(params, cfg: ModelConfig, pages, tokens, positions,
                       block_tables, *, rules=None, act_dtype=jnp.bfloat16):
     """tokens: [B] new ids; positions: [B] tokens already cached;

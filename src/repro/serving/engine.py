@@ -44,7 +44,8 @@ from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
 from repro.core.wma import batch_wma
 from repro.models import model as M
-from repro.serving.paged_cache import BlockAllocator
+from repro.serving.paged_cache import (BlockAllocator, NULL_SEQ, PrefixCache,
+                                       PrefixEntry)
 from repro.workload.tokenizer import encode
 
 
@@ -97,6 +98,8 @@ def _jitted(cfg: ModelConfig, dtype):
             functools.partial(M.decode_multi_paged, cfg=cfg,
                               act_dtype=dtype),
             static_argnames=("num_steps",)),
+        "prefill_suffix": jax.jit(
+            functools.partial(M.prefill_suffix, cfg=cfg, act_dtype=dtype)),
     }
 
 
@@ -317,6 +320,15 @@ class PagedContinuousEngine:
 
     A reserved *null block* backs every inactive/pad table entry so masked
     gathers and idle-slot writes can never touch a live request's pages.
+
+    With ``prefix_cache`` enabled (DESIGN.md §10), admission consults a
+    content-keyed index of published full-block *instruction* prefixes:
+    a hit shares the cached pages (ref-counted) and prefills only the
+    user-input suffix at position offset ``len(prefix)``; a miss prefills
+    the whole prompt once and publishes its instruction pages for every
+    later request of that app.  Finish/evict drop per-request references;
+    shared pages free only when the cache entry is LRU-evicted under pool
+    pressure *and* no live table references them.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
@@ -324,7 +336,8 @@ class PagedContinuousEngine:
                  block_tokens: int = 16, max_len: int = 256,
                  max_gen: int = 64, dtype=jnp.float32,
                  allocator: Optional[BlockAllocator] = None,
-                 fuse: bool = True, warmup: bool = False):
+                 fuse: bool = True, warmup: bool = False,
+                 prefix_cache=False):
         ok, why = M.supports_paged(cfg)
         if not ok:
             raise NotImplementedError(f"{cfg.name}: {why}")
@@ -335,6 +348,14 @@ class PagedContinuousEngine:
         self.fuse = fuse
         self.allocator = allocator if allocator is not None else \
             BlockAllocator(num_blocks, block_tokens)
+        if isinstance(prefix_cache, PrefixCache):
+            if prefix_cache.allocator is not self.allocator:
+                raise ValueError("prefix_cache must share the engine's "
+                                 "BlockAllocator (one physical pool)")
+            self.prefix_cache: Optional[PrefixCache] = prefix_cache
+        else:
+            self.prefix_cache = (PrefixCache(self.allocator) if prefix_cache
+                                 else None)
         self.bt = self.allocator.block_tokens
         self.slots = max_concurrency
         self.max_blocks = -(-(max_len + max_gen) // self.bt)
@@ -344,6 +365,7 @@ class PagedContinuousEngine:
             cfg, jax.random.PRNGKey(seed))
         jt = _jitted(cfg, dtype)
         self._prefill = jt["prefill"]
+        self._prefill_suffix = jt["prefill_suffix"]
         self._decode_multi = jt["decode_multi_paged"]
         self.pages = M.init_paged_cache(
             cfg, self.allocator.num_blocks, self.bt,
@@ -365,7 +387,8 @@ class PagedContinuousEngine:
         if warmup:
             self.warmup()
 
-    _NULL_SEQ = -1   # allocator seq_id owning the null block, never freed
+    _NULL_SEQ = NULL_SEQ   # allocator seq_id owning the null block
+                           # (shared constant: serving.paged_cache.NULL_SEQ)
 
     # -- admission -----------------------------------------------------------
 
@@ -377,73 +400,128 @@ class PagedContinuousEngine:
         return encode(f"{req.instruction} {req.user_input}",
                       self.cfg.vocab_size)[:self.max_len]
 
+    def _prefix_key(self, req: Request, ids: List[int]) -> Tuple[int, ...]:
+        """Content key of ``req``'s shareable prefix: the longest
+        full-block run of *instruction* tokens (a strict prefix of the
+        prompt ids).  The block rounding itself lives in
+        ``PrefixCache.key_of`` (one source of truth); this only bounds
+        it to the instruction."""
+        instr = encode(req.instruction, self.cfg.vocab_size)
+        return self.prefix_cache.key_of(ids[:len(instr) + 1])
+
+    def _cached_tokens(self, req: Request,
+                       ids: Optional[List[int]] = None) -> int:
+        """Tokens a prefix-cache hit would share right now (0 on miss or
+        with the cache disabled).  Peeks without touching LRU order."""
+        if self.prefix_cache is None:
+            return 0
+        if ids is None:
+            ids = self._prompt_ids(req)
+        key = self._prefix_key(req, ids)
+        return len(key) if key and key in self.prefix_cache.entries else 0
+
     def reserve_tokens(self, req: Request,
                        n_prompt: Optional[int] = None) -> int:
         """Admission footprint: encoded prompt + *predicted* generation
-        tokens (exactly what ``join`` will reserve)."""
+        tokens — the token span the request's block table must cover
+        (shared prefix pages included; subtract ``_cached_tokens`` for
+        the *new* blocks a hit actually claims)."""
         if n_prompt is None:
             n_prompt = len(self._prompt_ids(req))
         g = (req.predicted_gen_length
              if req.predicted_gen_length is not None else self.max_gen)
         return n_prompt + max(1, min(g, self.max_gen))
 
-    def can_admit(self, req: Request) -> bool:
-        return (None in self.active
-                and self.allocator.can_allocate(-2, self.reserve_tokens(req)))
+    def _reclaimable_blocks(self, keep: Optional[Tuple[int, ...]]) -> int:
+        """Blocks prefix-cache LRU eviction would actually free: blocks
+        of unpinned entries (≠ ``keep``) referenced by no live table."""
+        if self.prefix_cache is None:
+            return 0
+        return sum(1 for k, e in self.prefix_cache.entries.items()
+                   if e.pins == 0 and k != keep
+                   for b in e.blocks
+                   if self.allocator.refcount.get(b) == 1)
 
-    def _reserve(self, req: Request) -> Tuple[int, List[int], List[int]]:
+    def can_admit(self, req: Request) -> bool:
+        if None not in self.active:
+            return False
+        ids = self._prompt_ids(req)
+        want = self.reserve_tokens(req, n_prompt=len(ids))
+        cached = self._cached_tokens(req, ids)
+        key = self._prefix_key(req, ids) if cached else None
+        need = self.allocator.blocks_needed(want - cached)
+        return need <= (len(self.allocator.free)
+                        + self._reclaimable_blocks(keep=key))
+
+    def _reserve(self, req: Request) -> Dict[str, object]:
         """Claim a slot + blocks for ``req`` (raises EngineFull) and mark
         the slot active; the KV pages are written by the caller's batched
-        prefill."""
+        (full or suffix) prefill.  On a prefix-cache hit the shared pages
+        head the table (pinned, ref-counted); only suffix + predicted-gen
+        blocks are newly claimed."""
         if None not in self.active:
             raise EngineFull(f"all {self.slots} slots occupied")
         slot = self.active.index(None)
         ids = self._prompt_ids(req)
+        entry: Optional[PrefixEntry] = None
+        looked_up = False
+        if self.prefix_cache is not None:
+            key = self._prefix_key(req, ids)
+            if key:
+                entry = self.prefix_cache.lookup(key)
+                looked_up = True
+        cached = entry.tokens(self.bt) if entry is not None else 0
         want = self.reserve_tokens(req, n_prompt=len(ids))
-        if not self.allocator.can_allocate(slot, want):
-            raise EngineFull(
-                f"{self.allocator.blocks_needed(want)} blocks wanted, "
-                f"{len(self.allocator.free)} free")
-        table = list(self.allocator.allocate(slot, want))
+        if entry is not None:
+            self.prefix_cache.pin(entry)    # protect from LRU while admitting
+        try:
+            if not self.allocator.can_allocate_new(want - cached):
+                need = self.allocator.blocks_needed(want - cached)
+                if self.prefix_cache is None \
+                        or not self.prefix_cache.evict_until(need):
+                    raise EngineFull(
+                        f"{self.allocator.blocks_needed(want - cached)} new "
+                        f"blocks wanted, {len(self.allocator.free)} free")
+            if entry is not None:
+                self.allocator.share(slot, entry.blocks)
+            table = list(self.allocator.allocate(slot, want))
+        except EngineFull:
+            if entry is not None:
+                self.prefix_cache.unpin(entry)
+            if looked_up:
+                # a refused admission is retried later: don't let the
+                # retry loop inflate the published hit/miss counters
+                if entry is not None:
+                    self.prefix_cache.hits -= 1
+                else:
+                    self.prefix_cache.misses -= 1
+            raise
         self.active[slot] = {"req": req, "generated": [],
-                             "target": min(req.gen_length, self.max_gen)}
-        return slot, ids, table
+                             "target": min(req.gen_length, self.max_gen),
+                             "prefix": entry}
+        return {"slot": slot, "ids": ids, "table": table,
+                "cached": cached, "req": req}
 
-    def _prefill_admitted(
-            self, admitted: List[Tuple[int, List[int], List[int]]]) -> None:
-        """One batched bucketed prefill for all just-reserved requests:
-        prompts pad to a common bucket, the batch rows pad to a power of
-        two (pad rows scatter into the null block), all KV lands in the
-        pool via one batched scatter per pool, and the per-slot engine
-        state (tables, positions, logits) updates in one scatter per
-        array — admission costs O(1) dispatches, not O(n)."""
+    def _scatter_slot_state(self, admitted: List[Dict[str, object]],
+                            logits) -> None:
+        """Batched per-slot engine-state update (tables, positions,
+        active mask, seed logits) — one scatter per array.  Pad rows
+        repeat row 0's *index and values*: the duplicate scatter writes
+        are identical, so the undefined winner is moot."""
         n = len(admitted)
-        nb = _pow2_ceil(n)
-        pad = _bucket(max(len(ids) for _, ids, _ in admitted))
-        tokens = np.zeros((nb, pad), np.int64)
-        lengths = np.ones(nb, np.int32)
+        nb = logits.shape[0]
         slots = np.zeros(nb, np.int32)
         rows = np.full((nb, self.max_blocks), self.null_block, np.int32)
+        pos_vals = np.ones(nb, np.int32)
         sel = np.zeros(nb, np.int32)
-        for i, (slot, ids, table) in enumerate(admitted):
-            tokens[i, :len(ids)] = ids
-            lengths[i] = len(ids)
-            slots[i] = slot
-            rows[i, :len(table)] = table
+        for i, a in enumerate(admitted):
+            slots[i] = a["slot"]
+            rows[i, :len(a["table"])] = a["table"]
+            pos_vals[i] = len(a["ids"])
             sel[i] = i
-        # pad rows repeat row 0's *index and values*: the duplicate
-        # scatter writes are identical, so the undefined winner is moot
         slots[n:] = slots[0]
         rows[n:] = rows[0]
-        pos_vals = lengths.copy()
-        pos_vals[n:] = lengths[0]
-        logits, cache = self._prefill(
-            self.params,
-            batch={"tokens": jnp.asarray(tokens),
-                   "lengths": jnp.asarray(lengths)})
-        self.pages = M.write_prefill_pages_batched(
-            self.pages, cache["kv"], [t for _, _, t in admitted],
-            null_block=self.null_block, pad_to=self.max_blocks)
+        pos_vals[n:] = pos_vals[0]
         idx = jnp.asarray(slots)
         self.tables = self.tables.at[idx].set(jnp.asarray(rows))
         self.positions = self.positions.at[idx].set(jnp.asarray(pos_vals))
@@ -452,17 +530,99 @@ class PagedContinuousEngine:
         # row 0 for them so the duplicate writes stay identical
         self.logits = self.logits.at[idx].set(
             logits[jnp.asarray(sel)].astype(self.dtype))
-        for slot, ids, _ in admitted:
-            self.pos_host[slot] = len(ids)
+        for a in admitted:
+            self.pos_host[a["slot"]] = len(a["ids"])
+
+    def _prefill_full(self, admitted: List[Dict[str, object]]) -> None:
+        """One batched bucketed prefill for just-reserved cache-miss
+        requests: prompts pad to a common bucket, the batch rows pad to a
+        power of two (pad rows scatter into the null block), all KV lands
+        in the pool via one batched scatter per pool, and the per-slot
+        engine state updates in one scatter per array — admission costs
+        O(1) dispatches, not O(n).  With the prefix cache enabled, each
+        miss then *publishes* its instruction pages (the table's leading
+        full blocks — identical for every request of the app, since K/V
+        at position i depend only on token i)."""
+        n = len(admitted)
+        nb = _pow2_ceil(n)
+        pad = _bucket(max(len(a["ids"]) for a in admitted))
+        tokens = np.zeros((nb, pad), np.int64)
+        lengths = np.ones(nb, np.int32)
+        for i, a in enumerate(admitted):
+            ids = a["ids"]
+            tokens[i, :len(ids)] = ids
+            lengths[i] = len(ids)
+        logits, cache = self._prefill(
+            self.params,
+            batch={"tokens": jnp.asarray(tokens),
+                   "lengths": jnp.asarray(lengths)})
+        self.pages = M.write_prefill_pages_batched(
+            self.pages, cache["kv"], [a["table"] for a in admitted],
+            null_block=self.null_block, pad_to=self.max_blocks)
+        self._scatter_slot_state(admitted, logits)
+        if self.prefix_cache is not None:
+            for a in admitted:
+                key = self._prefix_key(a["req"], a["ids"])
+                nb_share = len(key) // self.bt
+                if nb_share:
+                    self.prefix_cache.publish(key, a["table"][:nb_share])
+
+    def _prefill_suffixes(self, admitted: List[Dict[str, object]]) -> None:
+        """Batched *suffix* prefill for prefix-cache hits: only the
+        user-input tokens run through the model, at position offset
+        ``len(prefix)``, attending to the shared prefix pages through the
+        block table; the suffix KV scatters into each request's private
+        blocks (which start exactly at a block boundary — cached prefixes
+        are full blocks)."""
+        n = len(admitted)
+        nb = _pow2_ceil(n)
+        pad = _bucket(max(len(a["ids"]) - a["cached"] for a in admitted))
+        tokens = np.zeros((nb, pad), np.int64)
+        lengths = np.ones(nb, np.int32)
+        plens = np.zeros(nb, np.int32)
+        rows = np.full((nb, self.max_blocks), self.null_block, np.int32)
+        for i, a in enumerate(admitted):
+            sfx = a["ids"][a["cached"]:]
+            tokens[i, :len(sfx)] = sfx
+            lengths[i] = len(sfx)
+            plens[i] = a["cached"]
+            rows[i, :len(a["table"])] = a["table"]
+        plens[n:] = plens[0]
+        rows[n:] = rows[0]
+        logits, kv = self._prefill_suffix(
+            self.params, pages=self.pages,
+            batch={"tokens": jnp.asarray(tokens),
+                   "lengths": jnp.asarray(lengths),
+                   "prefix_lens": jnp.asarray(plens),
+                   "block_tables": jnp.asarray(rows)})
+        suffix_tables = [a["table"][a["cached"] // self.bt:]
+                         for a in admitted]
+        self.pages = M.write_prefill_pages_batched(
+            self.pages, kv, suffix_tables,
+            null_block=self.null_block, pad_to=self.max_blocks)
+        self._scatter_slot_state(admitted, logits)
+
+    def _prefill_admitted(self, admitted: List[Dict[str, object]]) -> None:
+        """Dispatch just-reserved requests to the right prefill: cache
+        misses run the full-prompt batched prefill (then publish their
+        instruction pages); hits run the suffix-only batched prefill."""
+        misses = [a for a in admitted if not a["cached"]]
+        hits = [a for a in admitted if a["cached"]]
+        if misses:
+            self._prefill_full(misses)
+        if hits:
+            self._prefill_suffixes(hits)
 
     def join(self, req: Request) -> int:
-        slot, ids, table = self._reserve(req)
-        self._prefill_admitted([(slot, ids, table)])
-        return slot
+        plan = self._reserve(req)
+        self._prefill_admitted([plan])
+        return int(plan["slot"])
 
     def join_many(self, reqs: Iterable[Request]) -> int:
-        """Admit the longest admissible prefix of ``reqs`` with ONE
-        batched prefill dispatch; returns how many were admitted (the
+        """Admit the longest admissible prefix of ``reqs`` with one
+        batched prefill dispatch per admission class — full-prompt for
+        prefix-cache misses, suffix-only for hits (≤ 2 total; exactly 1
+        with the cache disabled).  Returns how many were admitted (the
         caller pops that many).  Stops at the first request that does not
         fit (FIFO admission, same discipline as repeated ``join``)."""
         admitted = []
@@ -485,10 +645,16 @@ class PagedContinuousEngine:
         self.pos_host[slot] = 0
         self.active[slot] = None
 
+    def _unpin_prefix(self, slot: int) -> None:
+        entry = self.active[slot].get("prefix")
+        if entry is not None:
+            self.prefix_cache.unpin(entry)
+
     def _evict(self, slot: int) -> Request:
         req = self.active[slot]["req"]
-        self.allocator.free_seq(slot)
-        self._release(slot)
+        self._unpin_prefix(slot)
+        self.allocator.free_seq(slot)     # shared prefix pages survive:
+        self._release(slot)               # the cache still holds a reference
         self.evictions += 1
         return req
 
@@ -519,6 +685,14 @@ class PagedContinuousEngine:
                 f"{self.allocator.blocks_needed(need)}-block KV")
         had = len(self.allocator.tables.get(slot, ()))
         while not self.allocator.can_allocate(slot, need):
+            # cold cached prefixes go first: reclaiming an unpinned
+            # prefix entry costs a future re-prefill, evicting a live
+            # request costs a restart-from-scratch
+            missing = (self.allocator.blocks_needed(need)
+                       - len(self.allocator.tables.get(slot, ())))
+            if self.prefix_cache is not None \
+                    and self.prefix_cache.evict_until(missing):
+                continue
             victim = self._pick_victim(exclude=slot)
             if victim is None:
                 # fits the pool on paper but no victim to free: blocks are
@@ -598,6 +772,7 @@ class PagedContinuousEngine:
             if len(a["generated"]) >= a["target"]:
                 finished.append(a["req"])
                 self.generated[a["req"].req_id] = a["generated"]
+                self._unpin_prefix(slot)
                 self.allocator.free_seq(slot)
                 self._release(slot)
         return finished, evicted, k
@@ -650,6 +825,23 @@ class PagedContinuousEngine:
                     self.pages, cache["kv"], [[] for _ in range(nb)],
                     null_block=self.null_block, pad_to=self.max_blocks)
                 self.logits.at[idx].set(logits[idx].astype(self.dtype))
+                if self.prefix_cache is not None:
+                    # suffix buckets mirror prompt buckets: a hit's
+                    # suffix prefill must also never compile mid-serve
+                    slogits, skv = self._prefill_suffix(
+                        self.params, pages=self.pages,
+                        batch={"tokens": jnp.asarray(
+                                   np.zeros((nb, pb), np.int64)),
+                               "lengths": jnp.asarray(
+                                   np.ones(nb, np.int32)),
+                               "prefix_lens": jnp.asarray(
+                                   np.zeros(nb, np.int32)),
+                               "block_tables": jnp.tile(
+                                   self._null_row[None, :], (nb, 1))})
+                    M.write_prefill_pages_batched(
+                        self.pages, skv, [[] for _ in range(nb)],
+                        null_block=self.null_block, pad_to=self.max_blocks)
+                    self.logits.at[idx].set(slogits[idx].astype(self.dtype))
             self.tables.at[idx].set(jnp.tile(self._null_row[None, :],
                                              (nb, 1)))
             self.positions.at[idx].set(jnp.asarray(np.zeros(nb, np.int32)))

@@ -9,32 +9,65 @@ run a larger beta at the same Θ with OOM handled by eviction instead of
 batch splitting.  This module is the allocator + accounting; the
 `PagedMemoryModel` plugs into the same batcher interface as
 `core.wma.MemoryModel`.
+
+Prefix sharing (DESIGN.md §10): blocks are **ref-counted**, so one
+physical block can appear in many sequences' tables.  The LMaaS workload
+serves `instruction + user_input` where the instruction is a fixed
+per-application template — its KV pages are identical for every request
+of that app (K/V at position i depend only on token i).  `PrefixCache`
+keeps a content-keyed index of published full-block instruction prefixes;
+admission shares those pages instead of re-prefilling them, and LRU
+eviction reclaims unpinned cached prefixes under pool pressure.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
 from repro.core.wma import MemoryModel
+from repro.workload.tokenizer import token_count
+
+# Allocator seq_id owning permanently-reserved sentinel blocks (the
+# engine's null block).  One shared constant: the engine's table setup and
+# the memory model's Θ accounting must agree on which seq is unplannable.
+NULL_SEQ = -1
 
 
 class BlockAllocator:
-    """Fixed-size block pool with per-sequence block tables."""
+    """Fixed-size block pool with per-sequence block tables and
+    per-block reference counts.
+
+    A block is *free* iff it has no references.  `allocate` hands out
+    fresh blocks at refcount 1; `share` appends already-owned blocks to
+    another sequence's table (refcount += 1); `retain`/`release` let a
+    non-sequence holder (the prefix cache) keep blocks alive.  A block
+    returns to the free list only when its refcount reaches 0 — freeing a
+    sequence whose prefix is shared never reclaims the shared pages.
+    """
 
     def __init__(self, num_blocks: int, block_tokens: int = 16):
         self.num_blocks = num_blocks
         self.block_tokens = block_tokens
         self.free: List[int] = list(range(num_blocks))
         self.tables: Dict[int, List[int]] = {}      # seq_id -> block ids
+        self.refcount: Dict[int, int] = {}          # block id -> references
 
     def blocks_needed(self, tokens: int) -> int:
         return -(-tokens // self.block_tokens)
 
     def can_allocate(self, seq_id: int, tokens: int) -> bool:
+        """Can seq ``seq_id`` grow its table to cover ``tokens`` tokens?"""
         have = len(self.tables.get(seq_id, []))
         return self.blocks_needed(tokens) - have <= len(self.free)
+
+    def can_allocate_new(self, tokens: int) -> bool:
+        """Would a *fresh* sequence of ``tokens`` tokens fit right now?
+        (The admission probe — no sentinel seq id that could collide with
+        a live sequence's table.)"""
+        return self.blocks_needed(tokens) <= len(self.free)
 
     def allocate(self, seq_id: int, tokens: int) -> List[int]:
         """Grow seq ``seq_id``'s table to cover ``tokens`` tokens."""
@@ -44,11 +77,44 @@ class BlockAllocator:
             raise MemoryError(
                 f"paged OOM: need {need} blocks, {len(self.free)} free")
         for _ in range(max(need, 0)):
-            table.append(self.free.pop())
+            b = self.free.pop()
+            self.refcount[b] = 1
+            table.append(b)
         return table
 
+    def share(self, seq_id: int, blocks: Sequence[int]) -> List[int]:
+        """Start seq ``seq_id``'s table with already-live ``blocks``
+        (refcount += 1 each).  Shared blocks must come first: the table
+        must not exist yet (prefix pages precede private pages)."""
+        if self.tables.get(seq_id):
+            raise ValueError(f"seq {seq_id} already has a table; shared "
+                             f"prefix blocks must be its first entries")
+        self.retain(blocks)
+        table = self.tables.setdefault(seq_id, [])
+        table.extend(blocks)
+        return table
+
+    def retain(self, blocks: Sequence[int]) -> None:
+        """Add one reference to each of ``blocks`` (all must be live)."""
+        for b in blocks:
+            if self.refcount.get(b, 0) <= 0:
+                raise ValueError(f"block {b} is free; cannot retain")
+            self.refcount[b] += 1
+
+    def release(self, blocks: Sequence[int]) -> None:
+        """Drop one reference from each of ``blocks``; refcount 0 frees."""
+        for b in blocks:
+            n = self.refcount.get(b, 0)
+            if n <= 0:
+                raise ValueError(f"double free of block {b}")
+            if n == 1:
+                del self.refcount[b]
+                self.free.append(b)
+            else:
+                self.refcount[b] = n - 1
+
     def free_seq(self, seq_id: int) -> None:
-        self.free.extend(self.tables.pop(seq_id, []))
+        self.release(self.tables.pop(seq_id, []))
 
     @property
     def used_blocks(self) -> int:
@@ -62,6 +128,104 @@ class BlockAllocator:
 
 
 @dataclasses.dataclass
+class PrefixEntry:
+    """A published full-block instruction prefix resident in the pool."""
+    key: Tuple[int, ...]          # the prefix token ids (content key)
+    blocks: List[int]             # physical pages holding its KV
+    pins: int = 0                 # in-flight requests admitted through it
+
+    def tokens(self, block_tokens: int) -> int:
+        return len(self.blocks) * block_tokens
+
+
+class PrefixCache:
+    """Content-keyed index of shared instruction-prefix pages.
+
+    Keys are the *full-block* prefix token ids themselves (the dict hash
+    is the content hash — exact, collision-free).  The cache holds one
+    reference on every entry's blocks, so published prefixes survive the
+    publishing request's finish/eviction; per-request references come and
+    go with the sharing sequences' tables.  ``pins`` counts in-flight
+    admissions through an entry: pinned entries are never LRU-evicted
+    (their pages are both hot and irreclaimable anyway — the sharing
+    tables hold references).  Under pool pressure ``evict_until`` pops
+    unpinned entries oldest-use-first and releases the cache's reference;
+    a block frees only when no table references it either.
+    """
+
+    def __init__(self, allocator: BlockAllocator):
+        self.allocator = allocator
+        self.entries: "OrderedDict[Tuple[int, ...], PrefixEntry]" = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evicted = 0
+
+    def key_of(self, token_ids: Sequence[int]) -> Tuple[int, ...]:
+        """Content key: the longest full-block prefix of ``token_ids``,
+        leaving at least one token uncached (a prefill needs >= 1 query
+        token to produce logits)."""
+        bt = self.allocator.block_tokens
+        n = max(len(token_ids) - 1, 0) // bt * bt
+        return tuple(token_ids[:n])
+
+    def lookup(self, key: Tuple[int, ...]) -> Optional[PrefixEntry]:
+        entry = self.entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.entries.move_to_end(key)        # LRU bump
+        self.hits += 1
+        return entry
+
+    def publish(self, key: Tuple[int, ...],
+                blocks: Sequence[int]) -> PrefixEntry:
+        """Register ``blocks`` (holding ``key``'s KV) as shareable; the
+        cache takes its own reference.  Idempotent per key."""
+        entry = self.entries.get(key)
+        if entry is not None:
+            return entry
+        if len(blocks) * self.allocator.block_tokens != len(key):
+            raise ValueError(
+                f"prefix of {len(key)} tokens needs exactly "
+                f"{len(key) // self.allocator.block_tokens} full blocks, "
+                f"got {len(blocks)}")
+        self.allocator.retain(blocks)
+        entry = PrefixEntry(key=key, blocks=list(blocks))
+        self.entries[key] = entry
+        return entry
+
+    def pin(self, entry: PrefixEntry) -> None:
+        entry.pins += 1
+
+    def unpin(self, entry: PrefixEntry) -> None:
+        if entry.pins <= 0:
+            raise ValueError("unpin of an unpinned prefix entry")
+        entry.pins -= 1
+
+    @property
+    def evictable_blocks(self) -> int:
+        """Blocks the cache could *release* right now (LRU-evictable
+        entries).  An upper bound on reclaim: blocks still referenced by
+        live tables stay allocated after release."""
+        return sum(len(e.blocks) for e in self.entries.values()
+                   if e.pins == 0)
+
+    def evict_until(self, free_blocks: int) -> bool:
+        """Evict unpinned entries (oldest use first) until the allocator
+        has ``free_blocks`` free blocks; returns success."""
+        while len(self.allocator.free) < free_blocks:
+            victim = next((k for k, e in self.entries.items()
+                           if e.pins == 0), None)
+            if victim is None:
+                return False
+            entry = self.entries.pop(victim)
+            self.allocator.release(entry.blocks)
+            self.evicted += 1
+        return True
+
+
+@dataclasses.dataclass
 class PagedMemoryModel:
     """MemoryModel-compatible facade: MEM(B) under block-granular
     allocation. ``mem_of``/``theta``/``physical_limit`` keep the batcher's
@@ -70,18 +234,24 @@ class PagedMemoryModel:
 
     When bound to a :class:`BlockAllocator` (``allocator``), planning Θ is
     the pool's exact byte capacity, so the batcher's Algorithm-1 check and
-    the runtime engine admit against the same physical blocks."""
+    the runtime engine admit against the same physical blocks.
+
+    With ``prefix_sharing`` the per-request footprint splits into a
+    shared full-block instruction prefix — charged ONCE per distinct
+    instruction in the batch, exactly like the runtime's ref-counted
+    pages — and a private suffix + predicted-generation remainder."""
     base: MemoryModel
     block_tokens: int = 16
     allocator: Optional[BlockAllocator] = None
+    prefix_sharing: bool = False
 
     @property
     def theta(self) -> int:
         if self.allocator is not None:
-            # seq -1 is the engine's permanently-reserved null block
-            # (PagedContinuousEngine._NULL_SEQ): not plannable capacity
+            # NULL_SEQ owns the engine's permanently-reserved null block:
+            # not plannable capacity
             usable = (self.allocator.num_blocks
-                      - len(self.allocator.tables.get(-1, ())))
+                      - len(self.allocator.tables.get(NULL_SEQ, ())))
             return usable * self.allocator.block_tokens * self.base.delta
         return self.base.theta
 
@@ -108,14 +278,32 @@ class PagedMemoryModel:
         # paged: no padding reservation — each request holds its own blocks
         return batch_size * self.request_bytes(batch_len + batch_gen)
 
+    def shared_prefix_tokens(self, req: Request) -> int:
+        """Full-block tokens of ``req``'s instruction prefix (what the
+        runtime's PrefixCache would share), leaving >= 1 prompt token
+        uncached.  0 when prefix sharing is off or the template is
+        shorter than one block."""
+        if not self.prefix_sharing or self.base.cfg.family == "ssm":
+            return 0
+        instr = token_count(req.instruction, bos=True)
+        n = min(instr, max(req.length - 1, 0))
+        return n // self.block_tokens * self.block_tokens
+
     def mem_of(self, batch: Batch, extra: Optional[Request] = None,
                predicted: bool = True) -> int:
         reqs = batch.requests + ([extra] if extra is not None else [])
         total = 0
+        charged: set = set()
         for r in reqs:
             g = (r.predicted_gen_length if predicted and
                  r.predicted_gen_length is not None else r.gen_length)
-            total += self.request_bytes(r.length + g)
+            shared = self.shared_prefix_tokens(r)
+            if shared and r.instruction not in charged:
+                # one copy of the prefix pages per distinct template —
+                # the ref-counted pool holds exactly one
+                charged.add(r.instruction)
+                total += self.request_bytes(shared)
+            total += self.request_bytes(r.length - shared + g)
         return total
 
     def vanilla_batch_size(self) -> int:

@@ -83,6 +83,7 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
                  train_requests: Optional[List[Request]] = None,
                  kv_dtype_bytes: int = 2,
                  host_sync_s: float = 0.0, dispatch: str = "fused",
+                 prefix_sharing: bool = False,
                  seed: int = 0) -> Metrics:
     workload = copy.deepcopy(workload)   # sims mutate finish times
     paged = strategy.endswith("-paged")
@@ -106,7 +107,8 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
         return CCBSimulator(cost, n_instances=n_instances,
                             parallel_limit=limit).run(workload)
     svc_cfg = MagnusConfig(strategy=strategy, wma_threshold=wma_threshold,
-                           fixed_batch_size=fixed_batch_size)
+                           fixed_batch_size=fixed_batch_size,
+                           prefix_sharing=prefix_sharing and paged)
     if predictor is None and (paged
                               or base_strategy in ("glp", "abp", "magnus")):
         predictor = GenerationLengthPredictor(seed=seed).fit(

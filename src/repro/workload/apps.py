@@ -98,6 +98,33 @@ def make_dataset(n_per_task: int, seed: int = 0,
     return out
 
 
+def make_shared_prefix_dataset(n: int, *, n_apps: int = 1,
+                               instr_words: int = 47, input_words: int = 8,
+                               gen_length: int = 8,
+                               seed: int = 0) -> List[Request]:
+    """Shared-instruction workload for prefix-cache studies (DESIGN.md
+    §10): ``n_apps`` distinct instruction templates of ``instr_words``
+    words each (long app prompts — few-shot templates, style guides —
+    are where per-app prefix sharing pays), requests assigned
+    round-robin with fresh ``input_words``-word user inputs.  With one
+    app every admission after the first is a prefix-cache hit; with
+    ``n_apps == n`` every admission misses."""
+    rng = np.random.default_rng(seed)
+    instructions = [" ".join(rng.choice(_WORDS, size=instr_words))
+                    for _ in range(n_apps)]
+    out: List[Request] = []
+    for i in range(n):
+        app = i % n_apps
+        text = " ".join(rng.choice(_WORDS, size=input_words))
+        out.append(Request(
+            app=f"shared{app}", task=f"shared{app}",
+            instruction=instructions[app], user_input=text,
+            length=instr_words + 1 + input_words,
+            user_input_length=input_words, gen_length=gen_length,
+            predicted_gen_length=gen_length))
+    return out
+
+
 def pearson(requests: List[Request]) -> float:
     x = np.array([r.user_input_length for r in requests], np.float64)
     y = np.array([r.gen_length for r in requests], np.float64)

@@ -11,17 +11,23 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks.extensions import (BENCH_ENGINE_SCHEMA_VERSION,  # noqa: E402
-                                   engine_perf)
+                                   engine_perf, prefix_cache_sweep)
 
 ENGINE_KEYS = {"decode_steps", "tokens", "wall_s", "steps_per_s",
                "tokens_per_s", "host_syncs", "host_syncs_per_token"}
 ENGINES = {"dense_batch", "paged_per_token", "paged_fused"}
+SWEEP_KEYS = {"prefill_wall_s", "prefill_tokens_per_s", "baseline_wall_s",
+              "baseline_tokens_per_s", "speedup_vs_baseline", "hits",
+              "misses"}
 
 
 @pytest.fixture(scope="module")
 def bench_doc(tmp_path_factory):
     out = tmp_path_factory.mktemp("bench") / "BENCH_engine.json"
     engine_perf(n_requests=3, max_gen=4, repeats=1, out_path=str(out))
+    # the prefix sweep *merges* into the same doc (smoke sizes)
+    prefix_cache_sweep(n_requests=4, instr_words=23, input_words=7,
+                       gen_length=2, repeats=1, out_path=str(out))
     return json.loads(out.read_text())
 
 
@@ -36,6 +42,31 @@ def test_bench_engine_schema_stable(bench_doc):
     cfg = bench_doc["config"]
     for k in ("arch", "n_requests", "max_gen", "max_len", "block_tokens"):
         assert k in cfg
+
+
+def test_bench_prefix_cache_section(bench_doc):
+    """Schema v2: the prefix_cache section (hit sweep + concurrency at
+    equal Θ) rides in the same doc engine_perf writes — either suite can
+    run first, neither clobbers the other."""
+    pc = bench_doc["prefix_cache"]
+    assert set(pc["hit_rates"]) == {"0", "0.5", "1"}
+    for hr, s in pc["hit_rates"].items():
+        assert set(s) == SWEEP_KEYS, hr
+        for k in SWEEP_KEYS:
+            assert isinstance(s[k], (int, float)), (hr, k)
+    assert pc["hit_rates"]["1"]["hits"] > 0
+    assert pc["hit_rates"]["0"]["hits"] == 0
+    assert isinstance(pc["speedup_at_hit1"], float)
+    # hits reserve suffix-only blocks: never fewer admissions than the
+    # no-cache baseline at the same pool (count assertion — perf wall
+    # times are not asserted in CI)
+    assert pc["admitted_with_cache"] >= pc["admitted_no_cache"]
+    assert pc["admitted_with_cache"] > 0
+    for k in ("instr_words", "block_tokens", "prefix_blocks",
+              "hit_new_blocks", "tight_pool_blocks"):
+        assert k in pc["config"], k
+    # the engine_perf sections survived the merge
+    assert set(bench_doc["engines"]) == ENGINES
 
 
 def test_bench_engine_sync_accounting(bench_doc):
