@@ -24,6 +24,14 @@
                     admitted-concurrency at equal Θ (DESIGN.md §10);
                     writes a ``prefix_cache`` section into
                     ``BENCH_engine.json``
+- radix_prefix    : radix-tree mixes (DESIGN.md §11): exact-hit /
+                    head-only-hit / miss workloads through the radix
+                    engine vs an analytic replay of the PR-3 exact-match
+                    cache vs no cache, in *prefilled tokens*
+                    (deterministic counts); head-only mixes must prefill
+                    fewer tokens than exact-match ever could — writes a
+                    ``radix_prefix`` section into ``BENCH_engine.json``
+                    (schema v3)
 """
 from __future__ import annotations
 
@@ -34,7 +42,7 @@ import numpy as np
 
 Row = Tuple[str, float, str]
 
-BENCH_ENGINE_SCHEMA_VERSION = 2
+BENCH_ENGINE_SCHEMA_VERSION = 3
 
 
 def sens_phi(rates=(12.0,), phis=(5e3, 5e4, 5e5, 5e12),
@@ -296,15 +304,17 @@ def prefix_cache_sweep(n_requests: int = 8, instr_words: int = 111,
 
     def _keep_only_app0(eng):
         """Reset cache contents between repeats: miss templates published
-        in repeat r must not turn into hits in repeat r+1."""
+        in repeat r must not turn into hits in repeat r+1.  Pins app 0's
+        radix path, leaf-evicts everything else, unpins."""
         pc = eng.prefix_cache
         if pc is None:
             return
-        key0 = eng._prefix_key(warm_req[0], eng._prompt_ids(warm_req[0]))
-        keep = pc.entries.get(key0)
+        share = eng._shareable_ids(warm_req[0],
+                                   eng._prompt_ids(warm_req[0]))
+        keep = pc.match(share, peek=True).node
         if keep is not None:
             pc.pin(keep)
-        pc.evict_until(10 ** 9)             # clears every unpinned entry
+        pc.evict_until(10 ** 9)             # clears every unpinned chain
         if keep is not None:
             pc.unpin(keep)
 
@@ -394,6 +404,146 @@ def prefix_cache_sweep(n_requests: int = 8, instr_words: int = 111,
     rows.append(("prefix_cache/concurrency_equal_theta", 0.0,
                  f"cached={conc[True]} baseline={conc[False]} "
                  f"gain=x{section['concurrency_gain_at_equal_theta']:.2f}"))
+    return rows
+
+
+def radix_prefix_sweep(n_requests: int = 8, head_words: int = 60,
+                       tail_words: int = 24, input_words: int = 8,
+                       gen_length: int = 4, block_tokens: int = 8,
+                       out_path: str = "BENCH_engine.json",
+                       arch: str = "smollm-135m") -> List[Row]:
+    """Radix-tree prefix mixes (DESIGN.md §11): how many tokens actually
+    run through a prefill under three workload shapes, measured on the
+    radix engine and compared against an analytic replay of PR 3's
+    content-keyed exact-match cache and the no-cache baseline.
+
+    - ``exact`` : every request uses ONE template.  Both caches hit, but
+      the radix tree also shares the template's mid-block tail (the
+      61-token instruction ends 5 tokens into block 8), which
+      exact-match re-prefilled per request — radix prefills strictly
+      fewer tokens even here.
+    - ``head``  : every request uses a DISTINCT template; all templates
+      share a ``head_words``-word preamble.  Exact-match never hits
+      (distinct keys) and re-prefills full prompts; the radix walk
+      shares the head across apps.  The v3 acceptance criterion:
+      ``prefill_tokens < exact_match_prefill_tokens`` on this mix.
+    - ``miss``  : distinct templates, nothing shared — both caches
+      degrade to the no-cache token count (honest floor).
+
+    Requests join *sequentially* (each admission sees its predecessors'
+    published boundaries — the steady-state regime; a single batched
+    wave would publish after matching and understate both caches
+    equally).  Token counts are deterministic; wall time is reported for
+    flavor only.  Merges a ``radix_prefix`` section into ``out_path``
+    (schema v3, tests/test_bench_schema.py)."""
+    import json
+    import os
+
+    from repro.configs import get_config
+    from repro.serving.engine import PagedContinuousEngine
+    from repro.workload.apps import (make_shared_head_dataset,
+                                     make_shared_prefix_dataset)
+    from repro.workload.tokenizer import encode
+
+    cfg = get_config(arch).reduced(num_layers=2, d_model=128)
+    instr_words = head_words + tail_words
+    prompt_tokens = instr_words + 1 + input_words
+    max_len = prompt_tokens + 1
+    max_gen = max(gen_length, 2)
+    blocks_per_req = -(-(prompt_tokens + max_gen) // block_tokens) + 1
+    num_blocks = 1 + n_requests * blocks_per_req + n_requests
+
+    def _mix(name: str):
+        if name == "exact":
+            return make_shared_prefix_dataset(
+                n_requests, n_apps=1, instr_words=instr_words,
+                input_words=input_words, gen_length=gen_length, seed=0)
+        if name == "head":
+            return make_shared_head_dataset(
+                n_requests, n_apps=n_requests, head_words=head_words,
+                tail_words=tail_words, input_words=input_words,
+                gen_length=gen_length, seed=1)
+        return make_shared_prefix_dataset(
+            n_requests, n_apps=n_requests, instr_words=instr_words,
+            input_words=input_words, gen_length=gen_length, seed=2)
+
+    def _exact_match_tokens(eng, reqs) -> int:
+        """PR 3's cache, replayed on paper: content-keyed full-block
+        instruction prefixes, exact template match or full prefill."""
+        seen, total = set(), 0
+        for r in reqs:
+            ids = eng._prompt_ids(r)
+            instr = encode(r.instruction, cfg.vocab_size)
+            span = min(len(instr), len(ids) - 1)
+            key = tuple(ids[:span // block_tokens * block_tokens])
+            if key and key in seen:
+                total += len(ids) - len(key)
+            else:
+                total += len(ids)
+                if key:
+                    seen.add(key)
+        return total
+
+    params = None
+    mixes = {}
+    rows: List[Row] = []
+    for name in ("exact", "head", "miss"):
+        reqs = _mix(name)
+        eng = PagedContinuousEngine(
+            cfg, params=params, max_concurrency=n_requests,
+            num_blocks=num_blocks, block_tokens=block_tokens,
+            max_len=max_len, max_gen=max_gen, prefix_cache=True)
+        params = eng.params
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.join(r)
+        while eng.num_active:
+            finished, evicted, _ = eng.step_window()
+            if evicted:
+                raise RuntimeError("eviction during a radix sweep — "
+                                   "pool sized too small")
+        wall = time.perf_counter() - t0
+        if len(eng.generated) != n_requests:
+            raise RuntimeError(f"{name}: served {len(eng.generated)}"
+                               f"/{n_requests} — refusing to publish")
+        no_cache = sum(len(eng._prompt_ids(r)) for r in reqs)
+        exact = _exact_match_tokens(eng, reqs)
+        mixes[name] = {
+            "prefill_tokens": int(eng.prefill_tokens),
+            "exact_match_prefill_tokens": int(exact),
+            "no_cache_prefill_tokens": int(no_cache),
+            "hits": int(eng.prefix_cache.hits),
+            "misses": int(eng.prefix_cache.misses),
+            "cow_copies": int(eng.cow_copies),
+            "radix_nodes": int(eng.prefix_cache.num_nodes),
+            "saved_vs_exact_match":
+                1.0 - eng.prefill_tokens / max(exact, 1),
+            "wall_s": wall}
+        rows.append((f"radix_prefix/{name}", wall * 1e6,
+                     f"prefill_toks={eng.prefill_tokens} "
+                     f"exact_match_toks={exact} no_cache_toks={no_cache} "
+                     f"hits={eng.prefix_cache.hits} "
+                     f"cow={eng.cow_copies}"))
+    section = {
+        "config": {"arch": arch, "reduced": True, "d_model": 128,
+                   "num_layers": 2, "n_requests": n_requests,
+                   "head_words": head_words, "tail_words": tail_words,
+                   "input_words": input_words, "gen_length": gen_length,
+                   "block_tokens": block_tokens},
+        "mixes": mixes,
+        "head_saved_vs_exact_match":
+            mixes["head"]["saved_vs_exact_match"]}
+    if out_path:
+        doc = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                doc = json.load(f)
+        doc["schema_version"] = BENCH_ENGINE_SCHEMA_VERSION
+        doc["radix_prefix"] = section
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+    rows.append(("radix_prefix/head_saved_vs_exact_match", 0.0,
+                 f"saved={section['head_saved_vs_exact_match']:.1%}"))
     return rows
 
 

@@ -41,6 +41,11 @@ SUITES = {
     # merges the prefix_cache section into BENCH_engine.json
     "prefix": lambda fast: E.prefix_cache_sweep(
         repeats=2 if fast else 3),
+    # radix mixes: exact / head-only / miss prefill-token accounting vs
+    # the PR-3 exact-match replay; merges the radix_prefix section
+    # (schema v3) into BENCH_engine.json
+    "radix": lambda fast: E.radix_prefix_sweep(
+        n_requests=6 if fast else 8),
 }
 
 

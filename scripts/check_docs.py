@@ -1,0 +1,78 @@
+"""Documentation checks (CI `docs` job):
+
+1. Internal markdown links in the repo's doc files resolve to existing
+   files (external http(s)/mailto links are skipped).
+2. Every Python module under src/ that contains doctest examples
+   (``>>>`` in a docstring) passes ``doctest``.
+
+Run from the repo root:
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = ["README.md", "DESIGN.md", "ROADMAP.md", "CHANGES.md",
+             "PAPER.md", "PAPERS.md", "benchmarks/README.md"]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)\s]*)?\)")
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOC_FILES:
+        path = ROOT / doc
+        if not path.exists():
+            errors.append(f"{doc}: listed doc file missing")
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                resolved = (path.parent / target).resolve()
+                if not resolved.exists():
+                    errors.append(f"{doc}:{i}: broken link -> {target}")
+    return errors
+
+
+def check_doctests() -> list:
+    errors = []
+    src = ROOT / "src"
+    sys.path.insert(0, str(src))
+    for py in sorted(src.rglob("*.py")):
+        if ">>>" not in py.read_text():
+            continue
+        mod_name = ".".join(py.relative_to(src).with_suffix("").parts)
+        if mod_name.endswith(".__init__"):
+            mod_name = mod_name[:-len(".__init__")]
+        try:
+            mod = importlib.import_module(mod_name)
+        except Exception as e:                      # pragma: no cover
+            errors.append(f"{mod_name}: import failed: {e}")
+            continue
+        failed, attempted = doctest.testmod(
+            mod, verbose=False, report=True,
+            optionflags=doctest.NORMALIZE_WHITESPACE)
+        print(f"doctest {mod_name}: {attempted} examples, {failed} failed")
+        if failed:
+            errors.append(f"{mod_name}: {failed} doctest failure(s)")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_doctests()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if not errors:
+        print("docs OK: links resolve, doctests pass")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

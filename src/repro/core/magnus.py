@@ -26,7 +26,7 @@ from repro.core.scheduler import FCFSScheduler, HRRNScheduler
 from repro.core.types import Batch, Request
 from repro.core.wma import MemoryModel
 from repro.serving.paged_cache import (BlockAllocator, PagedMemoryModel,
-                                       PrefixCache)
+                                       RadixPrefixCache)
 
 STRATEGIES = ("vs", "vsq", "ccb", "glp", "abp", "magnus",
               "ccb-paged", "magnus-paged")
@@ -39,9 +39,10 @@ class MagnusConfig:
     fixed_batch_size: Optional[int] = None  # None => Eq. (1) for vs/vsq/glp
     continuous_learning: bool = True
     block_tokens: int = 16              # paged strategies: tokens per block
-    # paged strategies: per-app instruction prefixes share ref-counted
-    # pages (DESIGN.md §10); Algorithm-1 footprints charge each distinct
-    # template once, mirroring the runtime's PrefixCache
+    # paged strategies: instruction prefixes share ref-counted pages via
+    # the runtime's token-id radix tree (DESIGN.md §11); Algorithm-1
+    # footprints charge shared heads once at longest-common-prefix
+    # granularity, mirroring the runtime's RadixPrefixCache
     prefix_sharing: bool = False
 
 
@@ -82,9 +83,9 @@ class MagnusService:
                 memory, block_tokens=bt, allocator=self.allocator,
                 prefix_sharing=self.cfg.prefix_sharing)
         self.memory = memory
-        # the runtime engine binds to this same index so planning and
-        # serving agree on which prefixes are resident
-        self.prefix_cache = (PrefixCache(self.allocator)
+        # the runtime engine binds to this same radix index so planning
+        # and serving agree on which prefixes are resident
+        self.prefix_cache = (RadixPrefixCache(self.allocator)
                              if self.paged and self.cfg.prefix_sharing
                              else None)
         # paged admission reserves per-request *predicted* blocks, so every

@@ -68,8 +68,9 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     BlockAllocator the engine stores KV pages in (DESIGN.md §8).  The
     engine admits whole scheduler batches through one bucketed prefill
     (``join_many``) and decodes in fused multi-step windows (§9).  With
-    ``prefix_cache`` the service's hit-aware footprints and the engine's
-    ref-counted shared instruction pages use ONE PrefixCache (§10)."""
+    ``prefix_cache`` the service's LCP-aware footprints and the engine's
+    ref-counted radix-shared instruction pages use ONE RadixPrefixCache
+    (§10-§11)."""
     import time
 
     from repro.core.magnus import MagnusConfig, MagnusService
@@ -136,11 +137,12 @@ def main() -> None:
     ap.add_argument("--backend", default="sim", choices=["sim", "engine"])
     ap.add_argument("--hw", default="v100", choices=["v100", "v5e"])
     ap.add_argument("--prefix-cache", action="store_true",
-                    help="paged strategies: share per-app instruction KV "
-                         "pages (runtime) / hit-aware footprints (sim)")
+                    help="paged strategies: radix-tree instruction-prefix "
+                         "sharing across apps with copy-on-write partial "
+                         "tails (runtime) / LCP-aware footprints (sim)")
     ap.add_argument("--block-tokens", type=int, default=16,
-                    help="paged engine block size; only *full* blocks of "
-                         "instruction tokens are shareable, so short app "
+                    help="paged engine block size; matches shorter than "
+                         "one block are treated as misses, so short app "
                          "templates need a smaller block to hit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

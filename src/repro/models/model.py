@@ -105,7 +105,8 @@ def prefill_suffix(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
                    *, rules=None, act_dtype=jnp.bfloat16):
     """Suffix-only prefill against cached prefix pages (paged families
     only).  batch: {"tokens": [B, S] suffix ids, "lengths": [B] valid
-    suffix counts, "prefix_lens": [B] cached full-block prefix tokens,
+    suffix counts, "prefix_lens": [B] cached prefix tokens (any offset —
+    a partial final block is masked past ``prefix_lens``),
     "block_tables": [B, M]}.  Returns (logits [B, V], suffix kv)."""
     return transformer.prefill_suffix(
         params, cfg, pages, batch["tokens"], batch["lengths"],
@@ -141,6 +142,19 @@ def write_prefill_pages_batched(pages, kv, tables, *, null_block: int = 0,
                                 pad_to: int = 0):
     return transformer.write_prefill_pages_batched(
         pages, kv, tables, null_block=null_block, pad_to=pad_to)
+
+
+def write_suffix_pages_batched(pages, kv, block_tables, starts, lengths, *,
+                               null_block: int = 0):
+    """Token-granular suffix-KV scatter at arbitrary offsets (radix
+    prefix hits whose match ends mid-block; DESIGN.md §11)."""
+    return transformer.write_suffix_pages_batched(
+        pages, kv, block_tables, starts, lengths, null_block=null_block)
+
+
+def copy_pages(pages, src, dst):
+    """Copy-on-write block clone: pages[:, dst[i]] = pages[:, src[i]]."""
+    return transformer.copy_pages(pages, src, dst)
 
 
 def cache_struct(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):

@@ -595,11 +595,12 @@ def prefill_suffix(params, cfg: ModelConfig, pages, tokens, lengths,
                    act_dtype=jnp.bfloat16):
     """Suffix-only prefill against cached prefix pages.
 
-    tokens: [B, S] *suffix* ids (the prompt minus its cached full-block
-    instruction prefix, right-padded); lengths: [B] valid suffix counts;
-    prefix_lens: [B] cached prefix tokens (full-block multiples);
-    block_tables: [B, M] — the request's table, shared prefix pages
-    first (beyond-prefix entries are gathered but masked).
+    tokens: [B, S] *suffix* ids (the prompt minus its cached radix-
+    matched prefix, right-padded); lengths: [B] valid suffix counts;
+    prefix_lens: [B] cached prefix tokens — any offset, including a
+    partial final block whose positions past ``prefix_lens`` are masked
+    (DESIGN.md §11); block_tables: [B, M] — the request's table, shared
+    prefix pages first (beyond-prefix entries are gathered but masked).
 
     Returns (next-token logits [B, V], suffix KV (k, v) each
     [L, B, S, Hkv, D]) — same contract as :func:`prefill`, computing only
@@ -732,6 +733,59 @@ def write_prefill_pages_batched(pages, kv, tables, *, null_block: int = 0,
 
     k, v = kv
     return {"k": put(pages["k"], k), "v": put(pages["v"], v)}
+
+
+def write_suffix_pages_batched(pages, kv, block_tables, starts, lengths,
+                               *, null_block: int = 0
+                               ) -> Dict[str, jax.Array]:
+    """Scatter batched *suffix* KV (k, v each [L, B, S, Hkv, D]) into the
+    pool at arbitrary token offsets — ONE scatter per pool.
+
+    Row ``b``'s position ``j`` lands at physical page
+    ``block_tables[b, (starts[b]+j) // bt]`` slot ``(starts[b]+j) % bt``.
+    Unlike :func:`write_prefill_pages_batched` (block-granular, offset
+    0), this writes token-granular and **only** the ``lengths[b]`` valid
+    positions: slots *before* ``starts[b]`` — the copied partial-prefix
+    KV of a copy-on-write clone (DESIGN.md §11) — are never touched, and
+    positions at or past ``lengths[b]`` (bucket pad, pad rows) scatter to
+    an out-of-range index and are dropped (``mode="drop"``).  Pad rows
+    must carry ``lengths == 0``.
+
+    Shape-stable per ``(B, S, M)``: tables/starts/lengths are data, so a
+    warmed engine never re-compiles this for a new hit mix."""
+    bt = pages["k"].shape[2]
+    nb_total = pages["k"].shape[1]
+    k, v = kv
+    l, b, s, h, dh = k.shape
+    j = jnp.arange(s)[None, :]                          # [1, S]
+    abspos = starts[:, None] + j                        # [B, S]
+    blk = jnp.clip(abspos // bt, 0, block_tables.shape[1] - 1)
+    phys = jnp.take_along_axis(block_tables, blk, axis=1)
+    valid = j < lengths[:, None]
+    phys = jnp.where(valid, phys, nb_total)             # OOB -> dropped
+    slot = abspos % bt
+    fp = phys.reshape(-1)
+    fs = slot.reshape(-1)
+
+    def put(pool, c):
+        vals = c.reshape(l, b * s, h, dh).astype(pool.dtype)
+        return pool.at[:, fp, fs].set(vals, mode="drop")
+
+    return {"k": put(pages["k"], k), "v": put(pages["v"], v)}
+
+
+def copy_pages(pages, src, dst) -> Dict[str, jax.Array]:
+    """Device-side block clone for copy-on-write: ``pages[:, dst[i]] =
+    pages[:, src[i]]`` for each pair, one gather + one scatter per pool.
+
+    ``src``/``dst`` are int32 ``[N]``; callers pad to a warmed
+    power-of-two N with (null_block, null_block) pairs — duplicate
+    destinations are only ever the null block rewriting itself, so the
+    undefined scatter winner is moot."""
+    def cp(pool):
+        return pool.at[:, dst].set(pool[:, src])
+
+    return {"k": cp(pages["k"]), "v": cp(pages["v"])}
 
 
 def write_prefill_pages(pages, kv, table) -> Dict[str, jax.Array]:

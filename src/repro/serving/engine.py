@@ -44,8 +44,8 @@ from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
 from repro.core.wma import batch_wma
 from repro.models import model as M
-from repro.serving.paged_cache import (BlockAllocator, NULL_SEQ, PrefixCache,
-                                       PrefixEntry)
+from repro.serving.paged_cache import (BlockAllocator, NULL_SEQ,
+                                       PrefixMatch, RadixPrefixCache)
 from repro.workload.tokenizer import encode
 
 
@@ -321,13 +321,20 @@ class PagedContinuousEngine:
     A reserved *null block* backs every inactive/pad table entry so masked
     gathers and idle-slot writes can never touch a live request's pages.
 
-    With ``prefix_cache`` enabled (DESIGN.md §10), admission consults a
-    content-keyed index of published full-block *instruction* prefixes:
-    a hit shares the cached pages (ref-counted) and prefills only the
-    user-input suffix at position offset ``len(prefix)``; a miss prefills
-    the whole prompt once and publishes its instruction pages for every
-    later request of that app.  Finish/evict drop per-request references;
-    shared pages free only when the cache entry is LRU-evicted under pool
+    With ``prefix_cache`` enabled (DESIGN.md §11), admission walks a
+    **token-id radix tree** of published prefix blocks: the longest
+    cached block-aligned prefix across *all* apps is shared (ref-
+    counted) and only the tokens past the divergence point run through
+    the model, at position offset ``match.tokens``.  A match ending
+    mid-block shares the partial tail read-only and **copy-on-writes**
+    it — fresh block, device page copy, table-entry swap — before the
+    suffix prefill appends into it; the same clone step guards the
+    decode grow path when a published partial tail would be appended to
+    (``cow_copies`` counts both).  Every admission *publishes* its
+    shareable instruction span at every block boundary, so a head-only
+    hit's private tail becomes an exact hit for the next same-template
+    request.  Finish/evict drop per-request references; shared pages
+    free only when radix leaf-LRU eviction reclaims them under pool
     pressure *and* no live table references them.
     """
 
@@ -348,14 +355,14 @@ class PagedContinuousEngine:
         self.fuse = fuse
         self.allocator = allocator if allocator is not None else \
             BlockAllocator(num_blocks, block_tokens)
-        if isinstance(prefix_cache, PrefixCache):
+        if isinstance(prefix_cache, RadixPrefixCache):
             if prefix_cache.allocator is not self.allocator:
                 raise ValueError("prefix_cache must share the engine's "
                                  "BlockAllocator (one physical pool)")
-            self.prefix_cache: Optional[PrefixCache] = prefix_cache
+            self.prefix_cache: Optional[RadixPrefixCache] = prefix_cache
         else:
-            self.prefix_cache = (PrefixCache(self.allocator) if prefix_cache
-                                 else None)
+            self.prefix_cache = (RadixPrefixCache(self.allocator)
+                                 if prefix_cache else None)
         self.bt = self.allocator.block_tokens
         self.slots = max_concurrency
         self.max_blocks = -(-(max_len + max_gen) // self.bt)
@@ -382,6 +389,8 @@ class PagedContinuousEngine:
         self.evictions = 0
         self.host_syncs = 0
         self.decode_steps = 0
+        self.prefill_tokens = 0   # tokens actually run through a prefill
+        self.cow_copies = 0       # copy-on-write block clones performed
         self.window_stats: Optional[Dict[str, int]] = None
         self.generated: Dict[int, List[int]] = {}   # finished req -> tokens
         if warmup:
@@ -400,107 +409,128 @@ class PagedContinuousEngine:
         return encode(f"{req.instruction} {req.user_input}",
                       self.cfg.vocab_size)[:self.max_len]
 
-    def _prefix_key(self, req: Request, ids: List[int]) -> Tuple[int, ...]:
-        """Content key of ``req``'s shareable prefix: the longest
-        full-block run of *instruction* tokens (a strict prefix of the
-        prompt ids).  The block rounding itself lives in
-        ``PrefixCache.key_of`` (one source of truth); this only bounds
-        it to the instruction."""
+    def _shareable_ids(self, req: Request, ids: List[int]) -> List[int]:
+        """Token ids of ``req``'s shareable span: the *instruction* head
+        of the prompt, capped one short of the full prompt (a prefill
+        needs >= 1 query token to produce logits).  The radix cache
+        matches and publishes at most this span — user-input tokens are
+        per-request and never enter the tree."""
         instr = encode(req.instruction, self.cfg.vocab_size)
-        return self.prefix_cache.key_of(ids[:len(instr) + 1])
-
-    def _cached_tokens(self, req: Request,
-                       ids: Optional[List[int]] = None) -> int:
-        """Tokens a prefix-cache hit would share right now (0 on miss or
-        with the cache disabled).  Peeks without touching LRU order."""
-        if self.prefix_cache is None:
-            return 0
-        if ids is None:
-            ids = self._prompt_ids(req)
-        key = self._prefix_key(req, ids)
-        return len(key) if key and key in self.prefix_cache.entries else 0
+        return ids[:min(len(instr), len(ids) - 1)]
 
     def reserve_tokens(self, req: Request,
                        n_prompt: Optional[int] = None) -> int:
         """Admission footprint: encoded prompt + *predicted* generation
         tokens — the token span the request's block table must cover
-        (shared prefix pages included; subtract ``_cached_tokens`` for
-        the *new* blocks a hit actually claims)."""
+        (shared prefix pages included; a radix hit claims only
+        ``blocks_needed(reserve) - match.full_blocks`` new blocks: the
+        fully-matched head is shared, while a partial tail block is
+        cloned and so still costs one of the new blocks)."""
         if n_prompt is None:
             n_prompt = len(self._prompt_ids(req))
         g = (req.predicted_gen_length
              if req.predicted_gen_length is not None else self.max_gen)
         return n_prompt + max(1, min(g, self.max_gen))
 
-    def _reclaimable_blocks(self, keep: Optional[Tuple[int, ...]]) -> int:
-        """Blocks prefix-cache LRU eviction would actually free: blocks
-        of unpinned entries (≠ ``keep``) referenced by no live table."""
+    def _reclaimable_blocks(self, keep=None) -> int:
+        """Blocks radix leaf-LRU eviction would actually free: blocks of
+        unpinned evictable nodes (``keep``'s path excluded) referenced
+        by no live table."""
         if self.prefix_cache is None:
             return 0
-        return sum(1 for k, e in self.prefix_cache.entries.items()
-                   if e.pins == 0 and k != keep
-                   for b in e.blocks
-                   if self.allocator.refcount.get(b) == 1)
+        return self.prefix_cache.reclaimable_blocks(keep=keep)
 
     def can_admit(self, req: Request) -> bool:
+        """Would :meth:`join` succeed right now?  Counts free blocks plus
+        what cache eviction could reclaim, minus the fully-shared blocks
+        a radix hit would not need to claim."""
         if None not in self.active:
             return False
         ids = self._prompt_ids(req)
         want = self.reserve_tokens(req, n_prompt=len(ids))
-        cached = self._cached_tokens(req, ids)
-        key = self._prefix_key(req, ids) if cached else None
-        need = self.allocator.blocks_needed(want - cached)
+        keep, full = None, 0
+        if self.prefix_cache is not None:
+            share = self._shareable_ids(req, ids)
+            if share:
+                m = self.prefix_cache.match(share, peek=True)
+                keep = m.node
+                full = m.full_blocks(self.bt) * self.bt
+        need = self.allocator.blocks_needed(want - full)
         return need <= (len(self.allocator.free)
-                        + self._reclaimable_blocks(keep=key))
+                        + self._reclaimable_blocks(keep=keep))
 
     def _reserve(self, req: Request) -> Dict[str, object]:
         """Claim a slot + blocks for ``req`` (raises EngineFull) and mark
         the slot active; the KV pages are written by the caller's batched
-        (full or suffix) prefill.  On a prefix-cache hit the shared pages
-        head the table (pinned, ref-counted); only suffix + predicted-gen
-        blocks are newly claimed."""
+        (full or suffix) prefill.
+
+        Admission state machine with the radix cache on:
+
+        1. *match* — walk the tree for the longest cached prefix of the
+           shareable span; pin the matched node's path (LRU-protected
+           while the admission is in flight).
+        2. *probe* — the request claims ``blocks_needed(reserve) -
+           match.full_blocks`` new blocks; if the pool is short, evict
+           cold cache leaves first, else refuse (``EngineFull``, match
+           counters rolled back so retries don't inflate them).
+        3. *share* — matched pages head the new table (ref-counted).
+        4. *copy-on-write* — a match ending mid-block swaps the shared
+           partial tail for a private clone (the device page copy runs
+           in the caller's batched prefill step).
+        5. *allocate* — fresh blocks for suffix + predicted generation.
+        """
         if None not in self.active:
             raise EngineFull(f"all {self.slots} slots occupied")
         slot = self.active.index(None)
         ids = self._prompt_ids(req)
-        entry: Optional[PrefixEntry] = None
+        share_ids: List[int] = []
+        m: Optional[PrefixMatch] = None
         looked_up = False
         if self.prefix_cache is not None:
-            key = self._prefix_key(req, ids)
-            if key:
-                entry = self.prefix_cache.lookup(key)
+            share_ids = self._shareable_ids(req, ids)
+            if share_ids:
+                m = self.prefix_cache.match(share_ids)
                 looked_up = True
-        cached = entry.tokens(self.bt) if entry is not None else 0
+                if m.node is None:
+                    m = None
+        cached = m.tokens if m is not None else 0
+        full = cached // self.bt * self.bt   # memory actually shared
         want = self.reserve_tokens(req, n_prompt=len(ids))
-        if entry is not None:
-            self.prefix_cache.pin(entry)    # protect from LRU while admitting
+        if m is not None:
+            self.prefix_cache.pin(m.node)   # protect from LRU while admitting
         try:
-            if not self.allocator.can_allocate_new(want - cached):
-                need = self.allocator.blocks_needed(want - cached)
+            if not self.allocator.can_allocate_new(want - full):
+                need = self.allocator.blocks_needed(want - full)
                 if self.prefix_cache is None \
                         or not self.prefix_cache.evict_until(need):
                     raise EngineFull(
-                        f"{self.allocator.blocks_needed(want - cached)} new "
-                        f"blocks wanted, {len(self.allocator.free)} free")
-            if entry is not None:
-                self.allocator.share(slot, entry.blocks)
+                        f"{need} new blocks wanted, "
+                        f"{len(self.allocator.free)} free")
+            cow = None
+            if m is not None:
+                self.allocator.share(slot, m.blocks)
+                if cached % self.bt:
+                    # the suffix prefill appends into the matched partial
+                    # tail: clone it (device copy in _prefill_suffixes)
+                    cow = self.allocator.cow_if_not_appendable(
+                        slot, len(m.blocks) - 1)
             table = list(self.allocator.allocate(slot, want))
         except EngineFull:
-            if entry is not None:
-                self.prefix_cache.unpin(entry)
+            if m is not None:
+                self.prefix_cache.unpin(m.node)
             if looked_up:
                 # a refused admission is retried later: don't let the
                 # retry loop inflate the published hit/miss counters
-                if entry is not None:
+                if m is not None:
                     self.prefix_cache.hits -= 1
                 else:
                     self.prefix_cache.misses -= 1
             raise
         self.active[slot] = {"req": req, "generated": [],
                              "target": min(req.gen_length, self.max_gen),
-                             "prefix": entry}
-        return {"slot": slot, "ids": ids, "table": table,
-                "cached": cached, "req": req}
+                             "prefix": m.node if m is not None else None}
+        return {"slot": slot, "ids": ids, "share_ids": share_ids,
+                "table": table, "cached": cached, "cow": cow, "req": req}
 
     def _scatter_slot_state(self, admitted: List[Dict[str, object]],
                             logits) -> None:
@@ -540,9 +570,11 @@ class PagedContinuousEngine:
         in the pool via one batched scatter per pool, and the per-slot
         engine state updates in one scatter per array — admission costs
         O(1) dispatches, not O(n).  With the prefix cache enabled, each
-        miss then *publishes* its instruction pages (the table's leading
-        full blocks — identical for every request of the app, since K/V
-        at position i depend only on token i)."""
+        miss then *publishes* its instruction span into the radix tree
+        at every block boundary — full blocks as chain nodes, a
+        mid-block instruction tail as a partial leaf (identical for
+        every request of the app, since K/V at position i depend only on
+        token i and its absolute position)."""
         n = len(admitted)
         nb = _pow2_ceil(n)
         pad = _bucket(max(len(a["ids"]) for a in admitted))
@@ -552,6 +584,7 @@ class PagedContinuousEngine:
             ids = a["ids"]
             tokens[i, :len(ids)] = ids
             lengths[i] = len(ids)
+            self.prefill_tokens += len(ids)
         logits, cache = self._prefill(
             self.params,
             batch={"tokens": jnp.asarray(tokens),
@@ -560,52 +593,88 @@ class PagedContinuousEngine:
             self.pages, cache["kv"], [a["table"] for a in admitted],
             null_block=self.null_block, pad_to=self.max_blocks)
         self._scatter_slot_state(admitted, logits)
-        if self.prefix_cache is not None:
-            for a in admitted:
-                key = self._prefix_key(a["req"], a["ids"])
-                nb_share = len(key) // self.bt
-                if nb_share:
-                    self.prefix_cache.publish(key, a["table"][:nb_share])
+        self._publish(admitted)
+
+    def _publish(self, admitted: List[Dict[str, object]]) -> None:
+        """Insert every admitted request's shareable instruction span
+        into the radix tree (all block boundaries; idempotent per
+        content).  Hits publish too: a head-only hit's private tail
+        blocks turn the next same-template request into an exact hit."""
+        if self.prefix_cache is None:
+            return
+        for a in admitted:
+            if a["share_ids"]:
+                self.prefix_cache.insert(a["share_ids"], a["table"])
 
     def _prefill_suffixes(self, admitted: List[Dict[str, object]]) -> None:
-        """Batched *suffix* prefill for prefix-cache hits: only the
-        user-input tokens run through the model, at position offset
-        ``len(prefix)``, attending to the shared prefix pages through the
-        block table; the suffix KV scatters into each request's private
-        blocks (which start exactly at a block boundary — cached prefixes
-        are full blocks)."""
+        """Batched *suffix* prefill for radix hits: only the tokens past
+        the match run through the model, at position offset
+        ``match.tokens`` (any offset — block-aligned or mid-block),
+        attending to the shared prefix pages through the block table.
+
+        Three device steps, each one dispatch for the whole wave:
+
+        1. **Copy-on-write clones** — matched partial tail blocks are
+           copied ``src -> dst`` (the clone must hold the prefix KV
+           *before* the suffix attention gathers it).
+        2. **Suffix prefill** — causal attention over (gathered prefix
+           pages ‖ suffix K/V) with per-row ``prefix_lens``.
+        3. **Suffix-KV scatter** — token-granular at the row's offset
+           (``write_suffix_pages_batched``): slots before the offset —
+           the copied prefix KV inside a clone — are never touched.
+
+        Each hit then publishes its instruction span's new boundaries
+        (the part past the match) into the tree."""
         n = len(admitted)
         nb = _pow2_ceil(n)
+        src = np.full(nb, self.null_block, np.int32)
+        dst = np.full(nb, self.null_block, np.int32)
+        have_cow = False
+        for i, a in enumerate(admitted):
+            if a["cow"] is not None:
+                src[i], dst[i] = a["cow"]
+                have_cow = True
+                self.cow_copies += 1
+        if have_cow:
+            self.pages = M.copy_pages(self.pages, jnp.asarray(src),
+                                      jnp.asarray(dst))
         pad = _bucket(max(len(a["ids"]) - a["cached"] for a in admitted))
         tokens = np.zeros((nb, pad), np.int64)
         lengths = np.ones(nb, np.int32)
+        wlens = np.zeros(nb, np.int32)      # scatter validity: pads drop
         plens = np.zeros(nb, np.int32)
         rows = np.full((nb, self.max_blocks), self.null_block, np.int32)
         for i, a in enumerate(admitted):
             sfx = a["ids"][a["cached"]:]
             tokens[i, :len(sfx)] = sfx
             lengths[i] = len(sfx)
+            wlens[i] = len(sfx)
             plens[i] = a["cached"]
             rows[i, :len(a["table"])] = a["table"]
+            self.prefill_tokens += len(sfx)
+        # pad rows repeat row 0 for the attention gather (valid indices);
+        # the KV scatter drops them via wlens == 0
         plens[n:] = plens[0]
         rows[n:] = rows[0]
+        rows_j = jnp.asarray(rows)
+        plens_j = jnp.asarray(plens)
         logits, kv = self._prefill_suffix(
             self.params, pages=self.pages,
             batch={"tokens": jnp.asarray(tokens),
                    "lengths": jnp.asarray(lengths),
-                   "prefix_lens": jnp.asarray(plens),
-                   "block_tables": jnp.asarray(rows)})
-        suffix_tables = [a["table"][a["cached"] // self.bt:]
-                         for a in admitted]
-        self.pages = M.write_prefill_pages_batched(
-            self.pages, kv, suffix_tables,
-            null_block=self.null_block, pad_to=self.max_blocks)
+                   "prefix_lens": plens_j,
+                   "block_tables": rows_j})
+        self.pages = M.write_suffix_pages_batched(
+            self.pages, kv, rows_j, plens_j, jnp.asarray(wlens),
+            null_block=self.null_block)
         self._scatter_slot_state(admitted, logits)
+        self._publish(admitted)
 
     def _prefill_admitted(self, admitted: List[Dict[str, object]]) -> None:
-        """Dispatch just-reserved requests to the right prefill: cache
-        misses run the full-prompt batched prefill (then publish their
-        instruction pages); hits run the suffix-only batched prefill."""
+        """Dispatch just-reserved requests to the right prefill: radix
+        misses run the full-prompt batched prefill; hits run the
+        suffix-only batched prefill (COW clones first).  Both classes
+        publish their instruction span into the tree afterwards."""
         misses = [a for a in admitted if not a["cached"]]
         hits = [a for a in admitted if a["cached"]]
         if misses:
@@ -621,10 +690,12 @@ class PagedContinuousEngine:
     def join_many(self, reqs: Iterable[Request]) -> int:
         """Admit the longest admissible prefix of ``reqs`` with one
         batched prefill dispatch per admission class — full-prompt for
-        prefix-cache misses, suffix-only for hits (≤ 2 total; exactly 1
-        with the cache disabled).  Returns how many were admitted (the
-        caller pops that many).  Stops at the first request that does not
-        fit (FIFO admission, same discipline as repeated ``join``)."""
+        radix misses, suffix-only for hits (≤ 2 total; exactly 1 with
+        the cache disabled; hits with a mid-block match add one batched
+        copy-on-write page-copy dispatch).  Returns how many were
+        admitted (the caller pops that many).  Stops at the first
+        request that does not fit (FIFO admission, same discipline as
+        repeated ``join``)."""
         admitted = []
         for req in reqs:
             try:
@@ -646,9 +717,11 @@ class PagedContinuousEngine:
         self.active[slot] = None
 
     def _unpin_prefix(self, slot: int) -> None:
-        entry = self.active[slot].get("prefix")
-        if entry is not None:
-            self.prefix_cache.unpin(entry)
+        """Release the slot's in-flight pin on its matched radix path
+        (finish and eviction both come through here)."""
+        node = self.active[slot].get("prefix")
+        if node is not None:
+            self.prefix_cache.unpin(node)
 
     def _evict(self, slot: int) -> Request:
         req = self.active[slot]["req"]
@@ -669,8 +742,14 @@ class PagedContinuousEngine:
                 best, best_prog = slot, prog
         return best
 
-    def _grow(self, slot: int, evicted: List[Request]) -> None:
-        """Ensure slot can hold pos_host[slot]+1 tokens; evict on demand."""
+    def _grow(self, slot: int,
+              evicted: List[Request]) -> List[Tuple[int, int]]:
+        """Ensure slot can hold pos_host[slot]+1 tokens AND privately
+        owns every block the coming decode window writes into; evict on
+        demand.  Returns (src, dst) copy-on-write page-copy pairs the
+        caller must apply on device before decoding — a published
+        partial instruction tail still shared with the radix cache is
+        the case that triggers one (DESIGN.md §11)."""
         need = int(self.pos_host[slot]) + 1
         if self.allocator.blocks_needed(need) > self.max_blocks:
             raise MemoryError(
@@ -701,10 +780,34 @@ class PagedContinuousEngine:
                     "paged pool exhausted by sequences outside this engine")
             evicted.append(self._evict(victim))
         table = self.allocator.allocate(slot, need)
-        if len(table) != had:
+        # copy-on-write: any still-shared block at or past the write
+        # cursor must be cloned before the window appends into it (the
+        # clone needs a free block; cold cache leaves go first — and
+        # evicting the leaf that *is* this block drops its refcount to 1,
+        # making the clone unnecessary, which the loop re-checks)
+        pairs: List[Tuple[int, int]] = []
+        start = int(self.pos_host[slot]) // self.bt
+        for idx in range(start, len(table)):
+            while self.allocator.refcount.get(table[idx], 0) > 1 \
+                    and not self.allocator.free:
+                if self.prefix_cache is not None \
+                        and self.prefix_cache.evict_until(1):
+                    continue
+                victim = self._pick_victim(exclude=slot)
+                if victim is None:
+                    raise MemoryError(
+                        "paged pool exhausted by sequences outside this "
+                        "engine")
+                evicted.append(self._evict(victim))
+            pair = self.allocator.cow_if_not_appendable(slot, idx)
+            if pair is not None:
+                pairs.append(pair)
+                self.cow_copies += 1
+        if len(table) != had or pairs:
             row = np.full(self.max_blocks, self.null_block, np.int32)
             row[:len(table)] = table
             self.tables = self.tables.at[slot].set(jnp.asarray(row))
+        return pairs
 
     # -- decode --------------------------------------------------------------
 
@@ -733,7 +836,23 @@ class PagedContinuousEngine:
         try:
             for slot, a in enumerate(self.active):
                 if a is not None:
-                    self._grow(slot, evicted)
+                    pairs = self._grow(slot, evicted)
+                    # apply this slot's COW page copies IMMEDIATELY: a
+                    # later slot's _grow may evict this one and recycle
+                    # its clone block — deferring to one batched copy
+                    # would scatter stale pages into the new owner
+                    # (duplicate destinations, undefined winner), and a
+                    # later MemoryError would leave the clone's table
+                    # swap applied but its prefix KV never copied
+                    if pairs:
+                        npairs = _pow2_ceil(len(pairs))
+                        src = np.full(npairs, self.null_block, np.int32)
+                        dst = np.full(npairs, self.null_block, np.int32)
+                        for i, (s, d) in enumerate(pairs):
+                            src[i], dst[i] = s, d
+                        self.pages = M.copy_pages(self.pages,
+                                                  jnp.asarray(src),
+                                                  jnp.asarray(dst))
         except MemoryError as e:
             # don't strand requests evicted earlier in this same step:
             # hand them to the caller on the exception for requeue
@@ -828,6 +947,7 @@ class PagedContinuousEngine:
                 if self.prefix_cache is not None:
                     # suffix buckets mirror prompt buckets: a hit's
                     # suffix prefill must also never compile mid-serve
+                    null_tables = jnp.tile(self._null_row[None, :], (nb, 1))
                     slogits, skv = self._prefill_suffix(
                         self.params, pages=self.pages,
                         batch={"tokens": jnp.asarray(
@@ -836,11 +956,18 @@ class PagedContinuousEngine:
                                    np.ones(nb, np.int32)),
                                "prefix_lens": jnp.asarray(
                                    np.zeros(nb, np.int32)),
-                               "block_tables": jnp.tile(
-                                   self._null_row[None, :], (nb, 1))})
-                    M.write_prefill_pages_batched(
-                        self.pages, skv, [[] for _ in range(nb)],
-                        null_block=self.null_block, pad_to=self.max_blocks)
+                               "block_tables": null_tables})
+                    # token-granular suffix scatter (zero write lengths:
+                    # everything drops) and the admission-wave COW page
+                    # copy, both shape-keyed on this (nb, pb) grid
+                    M.write_suffix_pages_batched(
+                        self.pages, skv, null_tables,
+                        jnp.asarray(np.zeros(nb, np.int32)),
+                        jnp.asarray(np.zeros(nb, np.int32)),
+                        null_block=self.null_block)
+                    nulls = jnp.asarray(
+                        np.full(nb, self.null_block, np.int32))
+                    M.copy_pages(self.pages, nulls, nulls)
                     self.logits.at[idx].set(slogits[idx].astype(self.dtype))
             self.tables.at[idx].set(jnp.tile(self._null_row[None, :],
                                              (nb, 1)))
@@ -850,6 +977,13 @@ class PagedContinuousEngine:
         self.tables.at[0].set(self._null_row)
         self.positions.at[0].set(0)
         self.active_mask.at[0].set(False)
+        if self.prefix_cache is not None:
+            # grow-path COW copies pad to a power of two <= slots
+            k = 1
+            while k <= _pow2_ceil(self.slots):
+                nulls = jnp.asarray(np.full(k, self.null_block, np.int32))
+                M.copy_pages(self.pages, nulls, nulls)
+                k <<= 1
         for k in windows:
             # results discarded: a discarded window only writes junk into
             # the null block of a *copy* of the pools

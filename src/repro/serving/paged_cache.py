@@ -10,25 +10,28 @@ batch splitting.  This module is the allocator + accounting; the
 `PagedMemoryModel` plugs into the same batcher interface as
 `core.wma.MemoryModel`.
 
-Prefix sharing (DESIGN.md §10): blocks are **ref-counted**, so one
+Prefix sharing (DESIGN.md §10-§11): blocks are **ref-counted**, so one
 physical block can appear in many sequences' tables.  The LMaaS workload
 serves `instruction + user_input` where the instruction is a fixed
 per-application template — its KV pages are identical for every request
-of that app (K/V at position i depend only on token i).  `PrefixCache`
-keeps a content-keyed index of published full-block instruction prefixes;
-admission shares those pages instead of re-prefilling them, and LRU
-eviction reclaims unpinned cached prefixes under pool pressure.
+of that app (K/V at position i depend only on token i and its absolute
+position).  :class:`RadixPrefixCache` indexes published prefix pages as
+a **token-id radix tree** at block granularity: admission matches the
+longest cached prefix across *all* apps (two templates sharing a
+few-shot preamble share its pages even though their tails differ), and
+:meth:`BlockAllocator.cow_if_not_appendable` lets the last *partial*
+block of a match be shared read-only and cloned only when a sequence
+must append into it (copy-on-write).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
 from repro.core.wma import MemoryModel
-from repro.workload.tokenizer import token_count
+from repro.workload.tokenizer import encode, token_count
 
 # Allocator seq_id owning permanently-reserved sentinel blocks (the
 # engine's null block).  One shared constant: the engine's table setup and
@@ -40,12 +43,30 @@ class BlockAllocator:
     """Fixed-size block pool with per-sequence block tables and
     per-block reference counts.
 
-    A block is *free* iff it has no references.  `allocate` hands out
-    fresh blocks at refcount 1; `share` appends already-owned blocks to
-    another sequence's table (refcount += 1); `retain`/`release` let a
-    non-sequence holder (the prefix cache) keep blocks alive.  A block
+    A block is *free* iff it has no references.  ``allocate`` hands out
+    fresh blocks at refcount 1; ``share`` appends already-owned blocks to
+    another sequence's table (refcount += 1); ``retain``/``release`` let
+    a non-sequence holder (the prefix cache) keep blocks alive.  A block
     returns to the free list only when its refcount reaches 0 — freeing a
     sequence whose prefix is shared never reclaims the shared pages.
+
+    **Copy-on-write** (:meth:`cow_if_not_appendable`): a table entry with
+    refcount > 1 is read-only for its sequence — other holders (the radix
+    cache, sibling sequences) see the same physical page.  Before a
+    sequence may *append* into such a block it must swap the entry for a
+    private clone; the allocator performs the ownership swap and the
+    caller copies the KV page on device.
+
+    >>> a = BlockAllocator(num_blocks=4, block_tokens=4)
+    >>> a.allocate(0, 6)              # 6 tokens -> 2 blocks
+    [3, 2]
+    >>> a.retain([2])                 # a second holder: block 2 is shared
+    >>> a.cow_if_not_appendable(0, 1) # seq 0 must not append into block 2
+    (2, 1)
+    >>> a.tables[0], a.refcount[2], a.refcount[1]
+    ([3, 1], 1, 1)
+    >>> a.cow_if_not_appendable(0, 1) is None   # already private: no-op
+    True
     """
 
     def __init__(self, num_blocks: int, block_tokens: int = 16):
@@ -56,6 +77,7 @@ class BlockAllocator:
         self.refcount: Dict[int, int] = {}          # block id -> references
 
     def blocks_needed(self, tokens: int) -> int:
+        """Blocks covering ``tokens`` tokens (ceil division)."""
         return -(-tokens // self.block_tokens)
 
     def can_allocate(self, seq_id: int, tokens: int) -> bool:
@@ -70,7 +92,11 @@ class BlockAllocator:
         return self.blocks_needed(tokens) <= len(self.free)
 
     def allocate(self, seq_id: int, tokens: int) -> List[int]:
-        """Grow seq ``seq_id``'s table to cover ``tokens`` tokens."""
+        """Grow seq ``seq_id``'s table to cover ``tokens`` tokens; every
+        newly appended block is private (refcount 1).  Returns the table
+        (shared + private entries, in position order).  Raises
+        :class:`MemoryError` when the pool cannot supply the missing
+        blocks — callers probe with :meth:`can_allocate` first."""
         table = self.tables.setdefault(seq_id, [])
         need = self.blocks_needed(tokens) - len(table)
         if need > len(self.free):
@@ -85,7 +111,9 @@ class BlockAllocator:
     def share(self, seq_id: int, blocks: Sequence[int]) -> List[int]:
         """Start seq ``seq_id``'s table with already-live ``blocks``
         (refcount += 1 each).  Shared blocks must come first: the table
-        must not exist yet (prefix pages precede private pages)."""
+        must not exist yet (prefix pages precede private pages, so a
+        request's private suffix/generation blocks always sit at higher
+        positions than anything it shares)."""
         if self.tables.get(seq_id):
             raise ValueError(f"seq {seq_id} already has a table; shared "
                              f"prefix blocks must be its first entries")
@@ -113,7 +141,37 @@ class BlockAllocator:
             else:
                 self.refcount[b] = n - 1
 
+    def cow_if_not_appendable(self, seq_id: int,
+                              idx: int) -> Optional[Tuple[int, int]]:
+        """Make table entry ``idx`` of seq ``seq_id`` privately writable.
+
+        If the block is already exclusive (refcount 1) this is a no-op
+        returning ``None`` — the sequence may append in place.  Otherwise
+        the entry is swapped for a fresh private block: the old block
+        keeps its other holders' references (it is **never mutated**),
+        the sequence's one reference moves to the clone, and
+        ``(src, dst)`` is returned so the caller can copy the KV page on
+        device (``pages[dst] = pages[src]``).  Raises
+        :class:`MemoryError` when no free block is available for the
+        clone — callers under pool pressure evict first."""
+        table = self.tables[seq_id]
+        src = table[idx]
+        n = self.refcount.get(src, 0)
+        if n <= 0:
+            raise ValueError(f"block {src} is free; cannot copy-on-write")
+        if n == 1:
+            return None
+        if not self.free:
+            raise MemoryError("paged OOM: no free block for copy-on-write")
+        dst = self.free.pop()
+        self.refcount[dst] = 1
+        self.refcount[src] = n - 1
+        table[idx] = dst
+        return (src, dst)
+
     def free_seq(self, seq_id: int) -> None:
+        """Drop the sequence's table, releasing one reference per entry
+        (shared pages survive as long as any other holder remains)."""
         self.release(self.tables.pop(seq_id, []))
 
     @property
@@ -127,102 +185,296 @@ class BlockAllocator:
         return live_tokens / used if used else 1.0
 
 
+class RadixNode:
+    """One cached block of prefix KV in the radix tree.
+
+    ``tokens`` is the block's token-id content — exactly
+    ``block_tokens`` ids for a *full* node (which may have children) or
+    fewer for a *partial* leaf (which may not: the tree only chains
+    through block boundaries).  ``block`` is the physical page holding
+    that KV; the cache owns one allocator reference per node."""
+
+    __slots__ = ("tokens", "block", "parent", "children", "partials",
+                 "pins", "last_used")
+
+    def __init__(self, tokens: Tuple[int, ...], block: Optional[int],
+                 parent: Optional["RadixNode"]):
+        self.tokens = tokens
+        self.block = block
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "RadixNode"] = {}
+        self.partials: Dict[Tuple[int, ...], "RadixNode"] = {}
+        self.pins = 0
+        self.last_used = 0
+
+    @property
+    def is_leaf(self) -> bool:
+        return not self.children and not self.partials
+
+
 @dataclasses.dataclass
-class PrefixEntry:
-    """A published full-block instruction prefix resident in the pool."""
-    key: Tuple[int, ...]          # the prefix token ids (content key)
-    blocks: List[int]             # physical pages holding its KV
-    pins: int = 0                 # in-flight requests admitted through it
+class PrefixMatch:
+    """Result of a radix walk: the deepest matched node, its path's
+    physical blocks (position order), and the matched token count.
+    ``tokens % block_tokens != 0`` means the final block is shared
+    *partially* — the admitting sequence must copy-on-write it before
+    writing its own suffix KV into the remaining slots."""
+    node: Optional[RadixNode]
+    blocks: List[int]
+    tokens: int
 
-    def tokens(self, block_tokens: int) -> int:
-        return len(self.blocks) * block_tokens
+    def full_blocks(self, block_tokens: int) -> int:
+        """Blocks of the match shared in their entirety (the memory the
+        sharer does *not* pay for; a partial tail block is cloned, so it
+        saves prefill compute but not pool capacity)."""
+        return self.tokens // block_tokens
 
 
-class PrefixCache:
-    """Content-keyed index of shared instruction-prefix pages.
+class RadixPrefixCache:
+    """Token-id radix tree over published prefix KV blocks.
 
-    Keys are the *full-block* prefix token ids themselves (the dict hash
-    is the content hash — exact, collision-free).  The cache holds one
-    reference on every entry's blocks, so published prefixes survive the
-    publishing request's finish/eviction; per-request references come and
-    go with the sharing sequences' tables.  ``pins`` counts in-flight
-    admissions through an entry: pinned entries are never LRU-evicted
-    (their pages are both hot and irreclaimable anyway — the sharing
-    tables hold references).  Under pool pressure ``evict_until`` pops
-    unpinned entries oldest-use-first and releases the cache's reference;
-    a block frees only when no table references it either.
+    Each edge holds one block's token content; a path from the root
+    spells out a prefix of some published prompt, and every node on the
+    path is a valid match endpoint — so two apps whose instruction
+    templates share a long common head share the head's pages even
+    though neither template is a prefix of the other (the
+    content-keyed exact-match cache this replaces shared nothing there).
+    Partial leaves additionally publish the tail of a prefix that ends
+    mid-block; they are shared read-only and cloned on append
+    (copy-on-write, :meth:`BlockAllocator.cow_if_not_appendable`).
+
+    The cache holds one allocator reference per node, so published pages
+    survive the publishing request's finish/eviction; per-request
+    references come and go with the sharing sequences' tables.
+    :meth:`pin`/:meth:`unpin` protect a matched node's whole root path
+    while an admission is in flight; :meth:`evict_until` reclaims
+    **unpinned leaves oldest-use-first** (a parent only becomes
+    evictable once its subtree is gone, which preserves the invariant
+    that every resident node's full path is resident — matches walk from
+    the root).
+
+    >>> alloc = BlockAllocator(num_blocks=8, block_tokens=2)
+    >>> cache = RadixPrefixCache(alloc)
+    >>> table = alloc.allocate(0, 5)          # covers ids [5,6,7,8,9]
+    >>> cache.insert([5, 6, 7, 8, 9], table)  # 2 full nodes + 1 partial
+    3
+    >>> m = cache.match([5, 6, 7, 8, 9, 1])   # same head, longer prompt
+    >>> (m.tokens, len(m.blocks), m.tokens % 2)
+    (5, 3, 1)
+    >>> cache.match([5, 6, 1]).tokens         # diverges inside block 2
+    2
+    >>> alloc.free_seq(0); cache.evict_until(8)  # cache refs released
+    True
+    >>> len(alloc.free)
+    8
     """
 
     def __init__(self, allocator: BlockAllocator):
         self.allocator = allocator
-        self.entries: "OrderedDict[Tuple[int, ...], PrefixEntry]" = \
-            OrderedDict()
+        self.root = RadixNode((), None, None)
         self.hits = 0
         self.misses = 0
         self.evicted = 0
+        self._clock = 0
 
-    def key_of(self, token_ids: Sequence[int]) -> Tuple[int, ...]:
-        """Content key: the longest full-block prefix of ``token_ids``,
-        leaving at least one token uncached (a prefill needs >= 1 query
-        token to produce logits)."""
+    # -- matching ------------------------------------------------------------
+
+    def match(self, token_ids: Sequence[int], *,
+              peek: bool = False) -> PrefixMatch:
+        """Longest cached prefix of ``token_ids``.
+
+        Walks full-block children while they match entirely, then takes
+        the longest partial extension — either a partial leaf or the
+        leading tokens of a full child (a cached full block whose first
+        r tokens match is shareable at valid length r: KV at a position
+        depends only on the token at that position).  Callers that need
+        ≥ 1 un-cached prompt token (a prefill needs a query position)
+        pass a slice that stops one short — the cache matches whatever
+        it is given.
+
+        Matches shorter than one full block are reported as misses: a
+        sub-block share (every prompt trivially shares its BOS token)
+        would pay a copy-on-write clone to save fewer tokens than the
+        clone costs.  With ``peek`` the walk is free of side effects;
+        otherwise it bumps the hit/miss counters and the LRU clock of
+        every node on the matched path."""
         bt = self.allocator.block_tokens
-        n = max(len(token_ids) - 1, 0) // bt * bt
-        return tuple(token_ids[:n])
+        node, blocks, matched = self.root, [], 0
+        n = len(token_ids)
+        while matched + bt <= n:
+            child = node.children.get(tuple(token_ids[matched:matched + bt]))
+            if child is None:
+                break
+            node = child
+            blocks.append(child.block)
+            matched += bt
+        # partial extension: longest common prefix into any partial leaf
+        # or full child at this depth
+        rest = tuple(token_ids[matched:])
+        best, best_len = None, 0
+        for cand in list(node.partials.values()) + list(node.children.values()):
+            l = _lcp(cand.tokens, rest)
+            if l > best_len:
+                best, best_len = cand, l
+        if best is not None:
+            node = best
+            blocks.append(best.block)
+            matched += best_len
+        if node is self.root or matched < bt:
+            if not peek:
+                self.misses += 1
+            return PrefixMatch(None, [], 0)
+        if not peek:
+            self.hits += 1
+            self._touch(node)
+        return PrefixMatch(node, blocks, matched)
 
-    def lookup(self, key: Tuple[int, ...]) -> Optional[PrefixEntry]:
-        entry = self.entries.get(key)
-        if entry is None:
-            self.misses += 1
-            return None
-        self.entries.move_to_end(key)        # LRU bump
-        self.hits += 1
-        return entry
+    def _touch(self, node: RadixNode) -> None:
+        self._clock += 1
+        while node is not None:
+            node.last_used = self._clock
+            node = node.parent
 
-    def publish(self, key: Tuple[int, ...],
-                blocks: Sequence[int]) -> PrefixEntry:
-        """Register ``blocks`` (holding ``key``'s KV) as shareable; the
-        cache takes its own reference.  Idempotent per key."""
-        entry = self.entries.get(key)
-        if entry is not None:
-            return entry
-        if len(blocks) * self.allocator.block_tokens != len(key):
-            raise ValueError(
-                f"prefix of {len(key)} tokens needs exactly "
-                f"{len(key) // self.allocator.block_tokens} full blocks, "
-                f"got {len(blocks)}")
-        self.allocator.retain(blocks)
-        entry = PrefixEntry(key=key, blocks=list(blocks))
-        self.entries[key] = entry
-        return entry
+    # -- publishing ----------------------------------------------------------
 
-    def pin(self, entry: PrefixEntry) -> None:
-        entry.pins += 1
+    def insert(self, token_ids: Sequence[int],
+               table: Sequence[int]) -> int:
+        """Publish every block boundary of ``token_ids`` (whose KV lives
+        in ``table``'s leading blocks): one full node per complete block
+        plus a partial leaf for a mid-block tail.  Existing nodes with
+        identical content are kept (their pages are already resident —
+        nothing is retained twice); only newly created nodes take a
+        cache reference on the corresponding table block.  Returns the
+        number of nodes inserted.  Idempotent per content.  Spans
+        shorter than one block publish nothing (they could never match —
+        see :meth:`match`'s one-block floor)."""
+        bt = self.allocator.block_tokens
+        node, pos, created = self.root, 0, 0
+        n = len(token_ids)
+        if n < bt:
+            return 0
+        while pos + bt <= n:
+            tup = tuple(token_ids[pos:pos + bt])
+            child = node.children.get(tup)
+            if child is None:
+                block = table[pos // bt]
+                self.allocator.retain([block])
+                child = RadixNode(tup, block, node)
+                node.children[tup] = child
+                created += 1
+            node = child
+            pos += bt
+        if pos < n:
+            tup = tuple(token_ids[pos:n])
+            if tup not in node.partials:
+                block = table[pos // bt]
+                self.allocator.retain([block])
+                node.partials[tup] = RadixNode(tup, block, node)
+                created += 1
+        if created:
+            self._clock += 1
+            self._touch(node)
+        return created
 
-    def unpin(self, entry: PrefixEntry) -> None:
-        if entry.pins <= 0:
-            raise ValueError("unpin of an unpinned prefix entry")
-        entry.pins -= 1
+    # -- pinning -------------------------------------------------------------
+
+    def pin(self, node: RadixNode) -> None:
+        """Protect ``node``'s whole root path from eviction while an
+        admission that shares its pages is in flight."""
+        while node is not None and node.parent is not None:
+            node.pins += 1
+            node = node.parent
+
+    def unpin(self, node: RadixNode) -> None:
+        while node is not None and node.parent is not None:
+            if node.pins <= 0:
+                raise ValueError("unpin of an unpinned radix node")
+            node.pins -= 1
+            node = node.parent
+
+    # -- introspection -------------------------------------------------------
+
+    def nodes(self) -> Iterator[RadixNode]:
+        """All resident nodes (excluding the block-less root)."""
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            if n is not self.root:
+                yield n
+            stack.extend(n.children.values())
+            stack.extend(n.partials.values())
 
     @property
-    def evictable_blocks(self) -> int:
-        """Blocks the cache could *release* right now (LRU-evictable
-        entries).  An upper bound on reclaim: blocks still referenced by
-        live tables stay allocated after release."""
-        return sum(len(e.blocks) for e in self.entries.values()
-                   if e.pins == 0)
+    def num_nodes(self) -> int:
+        return sum(1 for _ in self.nodes())
+
+    def reclaimable_blocks(self, keep: Optional[RadixNode] = None) -> int:
+        """Blocks leaf-LRU eviction would actually *free*: blocks of
+        unpinned evictable nodes (whole subtree evictable, ``keep``'s
+        path excluded) that no live table references."""
+        keep_path = set()
+        while keep is not None:
+            keep_path.add(id(keep))
+            keep = keep.parent
+
+        def walk(node: RadixNode) -> Tuple[bool, int]:
+            evictable, count = True, 0
+            for child in list(node.children.values()) + \
+                    list(node.partials.values()):
+                ok, c = walk(child)
+                count += c
+                evictable = evictable and ok
+            if node is self.root:
+                return evictable, count
+            evictable = (evictable and node.pins == 0
+                         and id(node) not in keep_path)
+            if evictable and self.allocator.refcount.get(node.block) == 1:
+                count += 1
+            return evictable, count
+
+        return walk(self.root)[1]
+
+    # -- eviction ------------------------------------------------------------
+
+    def _lru_leaf(self) -> Optional[RadixNode]:
+        best = None
+        for n in self.nodes():
+            if n.is_leaf and n.pins == 0:
+                if best is None or n.last_used < best.last_used:
+                    best = n
+        return best
 
     def evict_until(self, free_blocks: int) -> bool:
-        """Evict unpinned entries (oldest use first) until the allocator
-        has ``free_blocks`` free blocks; returns success."""
+        """Evict unpinned leaves (oldest use first) until the allocator
+        has ``free_blocks`` free blocks; returns success.  Evicting a
+        leaf releases the cache's reference — the block only frees if no
+        live table shares it — and may expose its parent as the next
+        eviction candidate.  Each eviction re-scans the tree for the LRU
+        leaf (O(nodes) per leaf): fine at instruction-template scale
+        (tens of chains); an intrusive leaf LRU list would be the
+        upgrade if the tree ever indexes per-request content."""
         while len(self.allocator.free) < free_blocks:
-            victim = next((k for k, e in self.entries.items()
-                           if e.pins == 0), None)
+            victim = self._lru_leaf()
             if victim is None:
                 return False
-            entry = self.entries.pop(victim)
-            self.allocator.release(entry.blocks)
+            parent = victim.parent
+            key = victim.tokens
+            if len(key) == self.allocator.block_tokens:
+                del parent.children[key]
+            else:
+                del parent.partials[key]
+            self.allocator.release([victim.block])
             self.evicted += 1
         return True
+
+
+def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
+    n = 0
+    for x, y in zip(a, b):
+        if x != y:
+            break
+        n += 1
+    return n
 
 
 @dataclasses.dataclass
@@ -237,13 +489,20 @@ class PagedMemoryModel:
     the runtime engine admit against the same physical blocks.
 
     With ``prefix_sharing`` the per-request footprint splits into a
-    shared full-block instruction prefix — charged ONCE per distinct
-    instruction in the batch, exactly like the runtime's ref-counted
-    pages — and a private suffix + predicted-generation remainder."""
+    shared instruction-prefix head and a private suffix +
+    predicted-generation remainder.  Shared heads are charged **once per
+    distinct full-block chain at longest-common-prefix granularity** — a
+    trie over the batch's instruction token blocks mirrors the runtime's
+    radix tree, so two templates sharing a 2-block preamble charge those
+    2 blocks once even though the templates differ (the partial tail
+    block is charged privately: the runtime clones it on append, so it
+    saves prefill compute, not pool capacity)."""
     base: MemoryModel
     block_tokens: int = 16
     allocator: Optional[BlockAllocator] = None
     prefix_sharing: bool = False
+    _ids_memo: Dict[str, List[int]] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def theta(self) -> int:
@@ -279,31 +538,49 @@ class PagedMemoryModel:
         return batch_size * self.request_bytes(batch_len + batch_gen)
 
     def shared_prefix_tokens(self, req: Request) -> int:
-        """Full-block tokens of ``req``'s instruction prefix (what the
-        runtime's PrefixCache would share), leaving >= 1 prompt token
-        uncached.  0 when prefix sharing is off or the template is
-        shorter than one block."""
+        """Full-block tokens of ``req``'s instruction prefix (the span
+        the runtime's radix cache can share without cloning), leaving
+        >= 1 prompt token uncached.  0 when prefix sharing is off or the
+        template is shorter than one block."""
         if not self.prefix_sharing or self.base.cfg.family == "ssm":
             return 0
         instr = token_count(req.instruction, bos=True)
         n = min(instr, max(req.length - 1, 0))
         return n // self.block_tokens * self.block_tokens
 
+    def _instr_ids(self, instruction: str) -> List[int]:
+        ids = self._ids_memo.get(instruction)
+        if ids is None:
+            ids = encode(instruction, self.base.cfg.vocab_size)
+            self._ids_memo[instruction] = ids
+        return ids
+
     def mem_of(self, batch: Batch, extra: Optional[Request] = None,
                predicted: bool = True) -> int:
         reqs = batch.requests + ([extra] if extra is not None else [])
         total = 0
-        charged: set = set()
+        trie: Dict = {}
         for r in reqs:
             g = (r.predicted_gen_length if predicted and
                  r.predicted_gen_length is not None else r.gen_length)
-            shared = self.shared_prefix_tokens(r)
-            if shared and r.instruction not in charged:
-                # one copy of the prefix pages per distinct template —
-                # the ref-counted pool holds exactly one
-                charged.add(r.instruction)
-                total += self.request_bytes(shared)
-            total += self.request_bytes(r.length - shared + g)
+            span = self.shared_prefix_tokens(r)
+            if span:
+                # walk the batch-local trie at LCP granularity: only the
+                # blocks this chain adds beyond already-charged heads
+                # cost pool capacity — exactly one physical copy exists
+                # in the runtime's ref-counted pool
+                ids = self._instr_ids(r.instruction)
+                node, new = trie, 0
+                for d in range(0, span, self.block_tokens):
+                    tup = tuple(ids[d:d + self.block_tokens])
+                    nxt = node.get(tup)
+                    if nxt is None:
+                        nxt = node[tup] = {}
+                        new += self.block_tokens
+                    node = nxt
+                if new:
+                    total += self.request_bytes(new)
+            total += self.request_bytes(r.length - span + g)
         return total
 
     def vanilla_batch_size(self) -> int:

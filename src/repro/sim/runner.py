@@ -2,7 +2,12 @@
 
 Strategies: vs | vsq | ccb | glp | abp | magnus   (Figs 10-13),
 plus the beyond-paper paged variants ccb-paged | magnus-paged
-(block-granular admission accounting; DESIGN.md §8).
+(block-granular admission accounting; DESIGN.md §8).  With
+``prefix_sharing`` the paged variants' Algorithm-1 footprints charge
+shared instruction heads once at longest-common-prefix granularity —
+the LCP trie in ``PagedMemoryModel.mem_of`` mirrors the runtime's
+radix tree (DESIGN.md §11), so batches concentrated on one template
+family plan with the same pool headroom the engine actually has.
 """
 from __future__ import annotations
 

@@ -125,6 +125,38 @@ def make_shared_prefix_dataset(n: int, *, n_apps: int = 1,
     return out
 
 
+def make_shared_head_dataset(n: int, *, n_apps: int = 3,
+                             head_words: int = 31, tail_words: int = 16,
+                             input_words: int = 8, gen_length: int = 8,
+                             seed: int = 0) -> List[Request]:
+    """Shared-head template *family* for radix prefix-cache studies
+    (DESIGN.md §11): ``n_apps`` distinct instruction templates that all
+    begin with the same ``head_words``-word preamble (a few-shot prompt,
+    a style guide) and diverge into per-app ``tail_words``-word tails.
+    Requests are assigned round-robin.
+
+    This is the workload the content-keyed exact-match cache of PR 3
+    could not serve: no two templates are equal, so every admission
+    missed — while the radix tree shares the common head across all
+    ``n_apps`` apps and re-prefills only tail + user input."""
+    rng = np.random.default_rng(seed)
+    head = " ".join(rng.choice(_WORDS, size=head_words))
+    instructions = [f"{head} " + " ".join(rng.choice(_WORDS,
+                                                     size=tail_words))
+                    for _ in range(n_apps)]
+    out: List[Request] = []
+    for i in range(n):
+        app = i % n_apps
+        text = " ".join(rng.choice(_WORDS, size=input_words))
+        out.append(Request(
+            app=f"head{app}", task=f"head{app}",
+            instruction=instructions[app], user_input=text,
+            length=head_words + tail_words + 1 + input_words,
+            user_input_length=input_words, gen_length=gen_length,
+            predicted_gen_length=gen_length))
+    return out
+
+
 def pearson(requests: List[Request]) -> float:
     x = np.array([r.user_input_length for r in requests], np.float64)
     y = np.array([r.gen_length for r in requests], np.float64)

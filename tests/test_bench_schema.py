@@ -11,7 +11,8 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks.extensions import (BENCH_ENGINE_SCHEMA_VERSION,  # noqa: E402
-                                   engine_perf, prefix_cache_sweep)
+                                   engine_perf, prefix_cache_sweep,
+                                   radix_prefix_sweep)
 
 ENGINE_KEYS = {"decode_steps", "tokens", "wall_s", "steps_per_s",
                "tokens_per_s", "host_syncs", "host_syncs_per_token"}
@@ -19,15 +20,21 @@ ENGINES = {"dense_batch", "paged_per_token", "paged_fused"}
 SWEEP_KEYS = {"prefill_wall_s", "prefill_tokens_per_s", "baseline_wall_s",
               "baseline_tokens_per_s", "speedup_vs_baseline", "hits",
               "misses"}
+RADIX_MIX_KEYS = {"prefill_tokens", "exact_match_prefill_tokens",
+                  "no_cache_prefill_tokens", "hits", "misses",
+                  "cow_copies", "radix_nodes", "saved_vs_exact_match",
+                  "wall_s"}
 
 
 @pytest.fixture(scope="module")
 def bench_doc(tmp_path_factory):
     out = tmp_path_factory.mktemp("bench") / "BENCH_engine.json"
     engine_perf(n_requests=3, max_gen=4, repeats=1, out_path=str(out))
-    # the prefix sweep *merges* into the same doc (smoke sizes)
+    # the prefix and radix sweeps *merge* into the same doc (smoke sizes)
     prefix_cache_sweep(n_requests=4, instr_words=23, input_words=7,
                        gen_length=2, repeats=1, out_path=str(out))
+    radix_prefix_sweep(n_requests=4, head_words=20, tail_words=10,
+                       input_words=5, gen_length=2, out_path=str(out))
     return json.loads(out.read_text())
 
 
@@ -67,6 +74,36 @@ def test_bench_prefix_cache_section(bench_doc):
         assert k in pc["config"], k
     # the engine_perf sections survived the merge
     assert set(bench_doc["engines"]) == ENGINES
+
+
+def test_bench_radix_prefix_section(bench_doc):
+    """Schema v3: the radix_prefix section (exact / head-only / miss
+    mixes in prefilled-token counts) rides in the same doc.  The
+    acceptance criterion is asserted on deterministic token counts:
+    head-only-hit mixes prefill fewer tokens than the PR-3 exact-match
+    replay ever could, and the exact mix beats it too (partial-tail
+    copy-on-write sharing)."""
+    rp = bench_doc["radix_prefix"]
+    assert set(rp["mixes"]) == {"exact", "head", "miss"}
+    for name, m in rp["mixes"].items():
+        assert set(m) == RADIX_MIX_KEYS, name
+        for k in RADIX_MIX_KEYS:
+            assert isinstance(m[k], (int, float)), (name, k)
+    head, exact, miss = (rp["mixes"]["head"], rp["mixes"]["exact"],
+                         rp["mixes"]["miss"])
+    # the tentpole claim: cross-app head sharing beats exact-match keying
+    assert head["prefill_tokens"] < head["exact_match_prefill_tokens"]
+    # partial-tail COW beats exact-match even on its best workload
+    assert exact["prefill_tokens"] < exact["exact_match_prefill_tokens"]
+    assert exact["cow_copies"] > 0
+    # nothing shared -> honest no-cache floor, no phantom hits
+    assert miss["prefill_tokens"] == miss["no_cache_prefill_tokens"]
+    assert miss["hits"] == 0
+    for k in ("head_words", "tail_words", "block_tokens", "n_requests"):
+        assert k in rp["config"], k
+    # sibling sections survived the merge
+    assert set(bench_doc["engines"]) == ENGINES
+    assert "prefix_cache" in bench_doc
 
 
 def test_bench_engine_sync_accounting(bench_doc):

@@ -1,17 +1,22 @@
-"""Prefix-cached paged serving acceptance tests (DESIGN.md §10):
+"""Prefix-cached paged serving acceptance tests (DESIGN.md §10-§11):
 
 - ref-counted allocator: share/retain/release lifecycle, conservation
-  under random admit/grow/share/finish/evict sequences (property test),
-  shared blocks survive owner eviction, ``can_allocate_new`` has no
-  probe-seq-id collision
-- PrefixCache: publish/lookup/pin/LRU-evict semantics
+  under random admit/grow/share/publish/finish/evict sequences
+  (property test), shared blocks survive owner eviction,
+  ``can_allocate_new`` has no probe-seq-id collision
+- RadixPrefixCache: insert/match/pin/leaf-LRU-evict semantics
 - prefix-aware prefill attention: Pallas-interpret kernel vs the
   gather oracle, and both suffix paths vs a *full* prefill — greedy
   tokens identical, logits equal to f32 rounding
-- engine: prefix cache on/off produces identical token streams, hits
-  reserve suffix-only blocks (strictly higher concurrency at equal Θ),
-  a warmed engine serves hit + miss waves with zero mid-serve compiles
+- engine: prefix cache on/off produces identical token streams
+  (including partial-tail copy-on-write matches), hits reserve
+  suffix-only blocks (strictly higher concurrency at equal Θ), a warmed
+  engine serves hit + miss waves with zero mid-serve compiles
 - PagedMemoryModel: prefix_sharing charges each distinct template once
+  and shared heads once at LCP granularity
+
+COW-specific property tests and cross-app radix sharing live in
+tests/test_radix_cow.py.
 """
 import numpy as np
 import pytest
@@ -29,8 +34,8 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import model as M
 from repro.serving.engine import PagedContinuousEngine, drive_paged
-from repro.serving.paged_cache import (BlockAllocator, NULL_SEQ, PrefixCache,
-                                       make_paged_memory)
+from repro.serving.paged_cache import (BlockAllocator, NULL_SEQ,
+                                       RadixPrefixCache, make_paged_memory)
 from repro.workload.apps import make_dataset, make_shared_prefix_dataset
 
 CFG = get_config("smollm-135m").reduced()
@@ -89,31 +94,35 @@ def test_can_allocate_new_no_probe_collision():
                 min_size=1, max_size=60))
 @settings(max_examples=100, deadline=None)
 def test_allocator_refcount_invariants(ops):
-    """Random admit/grow/share/finish/evict (+cache publish/evict):
-    free + unique-live == num_blocks, refcounts == holder counts, never
-    negative, no double-free, shared blocks survive owner eviction."""
+    """Random admit/grow/radix-publish/share/finish/evict: free +
+    unique-live == num_blocks, refcounts == holder counts (tables +
+    radix nodes), never negative, no double-free, shared blocks survive
+    owner eviction."""
     a = BlockAllocator(num_blocks=32, block_tokens=4)
-    cache = PrefixCache(a)
+    cache = RadixPrefixCache(a)
     for op, seq, tokens in ops:
         if op == 0:                       # admit / grow
             if a.can_allocate(seq, tokens):
                 a.allocate(seq, tokens)
         elif op == 1:                     # finish / evict
             a.free_seq(seq)
-        elif op == 2:                     # publish seq's leading full blocks
+        elif op == 2:                     # publish seq's leading span
             table = a.tables.get(seq, [])
-            nb = min(len(table), tokens // a.block_tokens)
-            if nb:
-                key = (seq,) * (nb * a.block_tokens)   # content stand-in
-                cache.publish(key, table[:nb])
-        elif op == 3:                     # share a cached prefix
-            entry = next(iter(cache.entries.values()), None)
+            span = min(len(table) * a.block_tokens, tokens)
+            if span:
+                # deterministic per-seq content stand-in: same seq
+                # re-publishes the same chain (idempotent inserts)
+                ids = [seq * 1000 + i for i in range(span)]
+                cache.insert(ids, table)
+        elif op == 3:                     # share a matched prefix
+            ids = [seq * 1000 + i for i in range(tokens)]
+            m = cache.match(ids, peek=True)
             new_seq = 100 + seq
-            if entry is not None and not a.tables.get(new_seq) \
+            full = m.tokens // a.block_tokens
+            if full and not a.tables.get(new_seq) \
                     and a.can_allocate_new(tokens):
-                a.share(new_seq, entry.blocks)
-                a.allocate(new_seq,
-                           len(entry.blocks) * a.block_tokens + tokens)
+                a.share(new_seq, m.blocks[:full])
+                a.allocate(new_seq, full * a.block_tokens + tokens)
         else:                             # cache pressure: evict LRU
             cache.evict_until(min(tokens, 8))
         # ---- invariants, after every op ----
@@ -121,9 +130,8 @@ def test_allocator_refcount_invariants(ops):
         for t in a.tables.values():
             for b in t:
                 holders[b] = holders.get(b, 0) + 1
-        for e in cache.entries.values():
-            for b in e.blocks:
-                holders[b] = holders.get(b, 0) + 1
+        for node in cache.nodes():
+            holders[node.block] = holders.get(node.block, 0) + 1
         assert holders == a.refcount, "refcount != holder count"
         assert all(n > 0 for n in a.refcount.values())
         assert set(a.free).isdisjoint(a.refcount)
@@ -136,40 +144,57 @@ def test_allocator_refcount_invariants(ops):
 
 
 # ---------------------------------------------------------------------------
-# PrefixCache
+# RadixPrefixCache
 # ---------------------------------------------------------------------------
 
-def test_prefix_cache_publish_lookup_lru():
+def test_radix_insert_match_pin_lru():
     a = BlockAllocator(num_blocks=16, block_tokens=4)
-    cache = PrefixCache(a)
+    cache = RadixPrefixCache(a)
+    ids1 = list(range(10, 18))                    # 2 full blocks
+    ids2 = list(range(20, 28))
     t1 = list(a.allocate(1, 8))
     t2 = list(a.allocate(2, 8))
-    e1 = cache.publish((1,) * 8, t1)
-    e2 = cache.publish((2,) * 8, t2)
-    assert cache.publish((1,) * 8, t1) is e1      # idempotent
+    assert cache.insert(ids1, t1) == 2
+    assert cache.insert(ids2, t2) == 2
+    assert cache.insert(ids1, t1) == 0            # idempotent
     a.free_seq(1)
     a.free_seq(2)
     assert a.used_blocks == 4                     # cache refs keep pages
-    assert cache.lookup((1,) * 8) is e1           # bumps e1's LRU slot
+    m1 = cache.match(ids1)                        # bumps chain 1's LRU
+    assert m1.tokens == 8 and m1.blocks == t1
     assert cache.hits == 1 and cache.misses == 0
-    assert cache.lookup((9,) * 8) is None
+    assert cache.match([99] * 8).node is None
     assert cache.misses == 1
-    cache.pin(e1)
-    assert cache.evict_until(14)                  # must evict e2, not e1
-    assert (2,) * 8 not in cache.entries and (1,) * 8 in cache.entries
-    assert not cache.evict_until(16), "pinned entry is not evictable"
-    cache.unpin(e1)
+    cache.pin(m1.node)
+    assert cache.evict_until(14)                  # must evict chain 2
+    assert cache.match(ids2, peek=True).tokens == 0
+    assert cache.match(ids1, peek=True).tokens == 8
+    assert not cache.evict_until(16), "pinned path is not evictable"
+    cache.unpin(m1.node)
     assert cache.evict_until(16)
     assert a.used_blocks == 0
 
 
-def test_prefix_cache_key_leaves_a_suffix_token():
-    a = BlockAllocator(num_blocks=8, block_tokens=4)
-    cache = PrefixCache(a)
-    assert cache.key_of(list(range(8))) == tuple(range(4)), \
-        "8 block-aligned tokens cache only 4: the suffix needs a query"
-    assert cache.key_of(list(range(9))) == tuple(range(8))
-    assert cache.key_of(list(range(3))) == ()
+def test_radix_partial_and_cross_chain_match():
+    """Block-boundary publishing: every node on a chain is a valid match
+    endpoint, mid-block divergence matches the longest common prefix
+    into full blocks and partial leaves alike."""
+    a = BlockAllocator(num_blocks=16, block_tokens=4)
+    cache = RadixPrefixCache(a)
+    ids = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10]        # 2 full + 2-token tail
+    t = list(a.allocate(1, 10))
+    assert cache.insert(ids, t) == 3              # 2 full nodes + partial
+    exact = cache.match(ids)
+    assert exact.tokens == 10 and exact.blocks == t
+    assert cache.match([1, 2, 3, 4]).tokens == 4, "interior node matches"
+    head = cache.match([1, 2, 3, 4, 5, 99, 0, 0])
+    assert head.tokens == 5, "LCP into a full block is shareable"
+    assert head.blocks == t[:2]
+    tail = cache.match([1, 2, 3, 4, 5, 6, 7, 8, 9, 99])
+    assert tail.tokens == 9 and tail.blocks == t  # LCP into partial leaf
+    # partial tails always end mid-block: the sharer must copy-on-write
+    assert tail.tokens % a.block_tokens != 0
+    assert tail.full_blocks(a.block_tokens) == 2
 
 
 # ---------------------------------------------------------------------------
@@ -321,7 +346,9 @@ def test_suffix_prefill_matches_full_prefill(params, use_kernel):
 # ---------------------------------------------------------------------------
 
 def _shared_reqs(n, seed=0, gen=6):
-    reqs = make_shared_prefix_dataset(n, n_apps=2, instr_words=15,
+    # 14 instruction words + BOS = 15 tokens: ends mid-block at
+    # block_tokens=4, so hits share a partial tail (copy-on-write)
+    reqs = make_shared_prefix_dataset(n, n_apps=2, instr_words=14,
                                       input_words=5, gen_length=gen,
                                       seed=seed)
     for i, r in enumerate(reqs):
@@ -333,7 +360,9 @@ def _shared_reqs(n, seed=0, gen=6):
 def test_engine_prefix_cache_token_streams_identical(params):
     """Cache on vs off: identical greedy token streams (suffix prefill
     changes where prompt KV comes from, never what is generated), with
-    real hits on the cached templates."""
+    real hits on the cached templates.  The 16-token instructions end
+    mid-block at block_tokens=4, so the hits exercise the partial-tail
+    copy-on-write path too."""
     out = {}
     for pc in (False, True):
         eng = PagedContinuousEngine(CFG, params=params, max_concurrency=3,
@@ -345,10 +374,13 @@ def test_engine_prefix_cache_token_streams_identical(params):
         out[pc] = [eng.generated[r.req_id] for r in reqs]
         if pc:
             assert eng.prefix_cache.hits >= 2, "templates never re-used"
-            cached = sum(len(e.blocks)
-                         for e in eng.prefix_cache.entries.values())
-            assert eng.allocator.used_blocks == 1 + cached
+            assert eng.cow_copies >= 1, "partial tails never cloned"
+            cached = {n.block for n in eng.prefix_cache.nodes()}
+            assert len(cached) == eng.prefix_cache.num_nodes, \
+                "each radix node owns a distinct physical block"
+            assert eng.allocator.used_blocks == 1 + len(cached)
         else:
+            assert eng.cow_copies == 0
             assert eng.allocator.used_blocks == 1
     assert out[True] == out[False]
 
@@ -384,10 +416,11 @@ def test_engine_shared_pages_survive_owner_eviction(params):
     eng = PagedContinuousEngine(CFG, params=params, max_concurrency=2,
                                 num_blocks=32, block_tokens=4,
                                 max_len=64, max_gen=8, prefix_cache=True)
-    eng.join(reqs[0])                     # publishes 4 prefix blocks
-    eng.join(reqs[1])                     # hit: shares them
-    entry = next(iter(eng.prefix_cache.entries.values()))
-    blocks = list(entry.blocks)
+    eng.join(reqs[0])                     # publishes 4 full prefix blocks
+    eng.join(reqs[1])                     # exact hit: shares them
+    share_ids = eng._shareable_ids(reqs[0], eng._prompt_ids(reqs[0]))
+    blocks = list(eng.prefix_cache.match(share_ids, peek=True).blocks)
+    assert len(blocks) == 4
     assert all(eng.allocator.refcount[b] == 3 for b in blocks)
     eng._evict(0)                         # owner evicted
     assert all(eng.allocator.refcount[b] == 2 for b in blocks), \
