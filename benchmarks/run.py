@@ -37,10 +37,11 @@ SUITES = {
     # writes BENCH_engine.json (schema guarded by tests/test_bench_schema.py)
     "engine": lambda fast: E.engine_perf(
         max_gen=16 if fast else 32, repeats=3 if fast else 5),
-    # prefix-cache hit sweep: suffix-only prefill vs full re-prefill;
-    # merges the prefix_cache section into BENCH_engine.json
+    # prefix-cache hit sweep: single-dispatch variable-prefix waves vs
+    # the no-cache baseline (paired measurement, §12); merges the
+    # prefix_cache section into BENCH_engine.json
     "prefix": lambda fast: E.prefix_cache_sweep(
-        repeats=2 if fast else 3),
+        repeats=2 if fast else 10),
     # radix mixes: exact / head-only / miss prefill-token accounting vs
     # the PR-3 exact-match replay; merges the radix_prefix section
     # (schema v3) into BENCH_engine.json

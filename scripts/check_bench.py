@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Bench regression guard: the checked-in BENCH_engine.json is the perf
+trajectory subsequent PRs regress against — this script fails CI when a
+PR commits a benchmark file whose headline metrics fall below the
+checked-in floors.
+
+Floors are *ratios and counts* (fused speedup, hit-rate sweep speedups,
+head-mix token savings, per-wave dispatch counts), never absolute wall
+times: ratios come from paired measurement on the same machine
+(benchmarks/extensions.py), so they are comparable across the shared-CPU
+containers the numbers were produced on, while absolute rates are not.
+Ratio floors get a small tolerance for scheduler noise; count floors are
+exact.
+
+    python scripts/check_bench.py [BENCH_engine.json]
+
+Exits non-zero listing every violated floor.  The floors encode the
+acceptance criteria of the PRs that shipped them:
+
+- ISSUE 2: fused multi-step decode >= 1.5x per-token dispatch
+- ISSUE 4: head-only radix mixes save >= 50% of exact-match prefill
+- ISSUE 5: single-dispatch variable-prefix waves — hit-rate 0.5 >= 1.4x
+  the no-cache baseline, hit-rate 0 >= 1.0x (cache-on never slower at
+  zero hits), exactly one prefill dispatch per single-bucket wave, and
+  retries prefill one token each
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# relative tolerance for ratio floors (paired best-of-N wall-time
+# ratios still carry residual scheduler noise); counts are exact
+RATIO_TOL = 0.05
+
+# (json path, floor, kind) — kind "ratio" allows RATIO_TOL slack,
+# "exact" must match, "min" is an exact lower bound
+FLOORS = [
+    (("speedup_fused_vs_per_token",), 1.5, "ratio"),
+    (("prefix_cache", "hit_rates", "0", "speedup_vs_baseline"),
+     1.0, "ratio"),
+    (("prefix_cache", "hit_rates", "0.5", "speedup_vs_baseline"),
+     1.4, "ratio"),
+    (("prefix_cache", "hit_rates", "1", "speedup_vs_baseline"),
+     1.9, "ratio"),
+    (("prefix_cache", "hit_rates", "0", "prefill_dispatches"),
+     1, "exact"),
+    (("prefix_cache", "hit_rates", "1", "prefill_dispatches"),
+     1, "exact"),
+    (("prefix_cache", "mixed_wave", "prefill_dispatches"), 1, "exact"),
+    (("prefix_cache", "retry_storm", "retry_dispatches"), 1, "exact"),
+    (("prefix_cache", "retry_storm", "tokens_saved"), 0.9, "min"),
+    (("prefix_cache", "concurrency_gain_at_equal_theta"), 2.0, "ratio"),
+    (("radix_prefix", "head_saved_vs_exact_match"), 0.5, "ratio"),
+]
+
+MIN_SCHEMA_VERSION = 4
+
+
+def _get(doc, path):
+    node = doc
+    for key in path:
+        if not isinstance(node, dict) or key not in node:
+            return None
+        node = node[key]
+    return node
+
+
+def check(doc) -> list:
+    failures = []
+    version = doc.get("schema_version", 0)
+    if version < MIN_SCHEMA_VERSION:
+        failures.append(
+            f"schema_version {version} < {MIN_SCHEMA_VERSION} "
+            f"(BENCH_engine.json regressed to an older schema)")
+    for path, floor, kind in FLOORS:
+        val = _get(doc, path)
+        name = ".".join(str(p) for p in path)
+        if val is None:
+            failures.append(f"{name}: MISSING (floor {floor})")
+            continue
+        if kind == "exact":
+            ok = val == floor
+            want = f"== {floor}"
+        elif kind == "min":
+            ok = val >= floor
+            want = f">= {floor}"
+        else:
+            ok = val >= floor * (1.0 - RATIO_TOL)
+            want = f">= {floor} (-{RATIO_TOL:.0%} tol)"
+        if not ok:
+            failures.append(f"{name}: {val} violates floor {want}")
+    return failures
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_engine.json"
+    with open(path) as f:
+        doc = json.load(f)
+    failures = check(doc)
+    for path_, floor, kind in FLOORS:
+        name = ".".join(str(p) for p in path_)
+        val = _get(doc, path_)
+        print(f"  {name} = {val}  (floor {floor}, {kind})")
+    if failures:
+        print(f"\n{len(failures)} bench floor violation(s):",
+              file=sys.stderr)
+        for msg in failures:
+            print(f"  FAIL {msg}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"\nOK: {path} meets all {len(FLOORS)} floors "
+          f"(schema v{doc.get('schema_version')})")
+
+
+if __name__ == "__main__":
+    main()

@@ -242,6 +242,21 @@ def paged_prefix_prefill_attention_kernel(
     kt = k_suf.transpose(0, 2, 1, 3)                        # [B, Hkv, S, D]
     vt = v_suf.transpose(0, 2, 1, 3)
     grid = (b, hkv, mb + 1)
+
+    # Variable-prefix DMA clamp (DESIGN.md §12): grid steps past a row's
+    # own prefix (``ji * bt >= prefix_lens[bi]`` — every step for a miss
+    # row with prefix_len 0) are compute-masked by ``pl.when``, but their
+    # BlockSpecs would still stream whatever page the pad table entry
+    # names.  Clamping the gather index to the row's LAST valid prefix
+    # block makes all dead steps re-reference one already-resident page
+    # (revisited blocks are not re-DMA'd), so a mixed admission wave pays
+    # prefix bandwidth proportional to each row's ACTUAL cached prefix,
+    # not to the padded table width.
+    def _page_index(ji, tables, pl_, bi):
+        last = jnp.maximum((pl_[bi] + bt - 1) // bt - 1, 0)
+        return tables[bi, jnp.minimum(jnp.minimum(ji, last),
+                                      tables.shape[1] - 1)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=grid,
@@ -254,12 +269,10 @@ def paged_prefix_prefill_attention_kernel(
                          lambda bi, hi, ji, tables, pl_, sl: (bi, hi, 0, 0)),
             pl.BlockSpec((1, bt, 1, d),
                          lambda bi, hi, ji, tables, pl_, sl:
-                         (tables[bi, jnp.minimum(ji, tables.shape[1] - 1)],
-                          0, hi, 0)),
+                         (_page_index(ji, tables, pl_, bi), 0, hi, 0)),
             pl.BlockSpec((1, bt, 1, d),
                          lambda bi, hi, ji, tables, pl_, sl:
-                         (tables[bi, jnp.minimum(ji, tables.shape[1] - 1)],
-                          0, hi, 0)),
+                         (_page_index(ji, tables, pl_, bi), 0, hi, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, s * g, d),
                                lambda bi, hi, ji, tables, pl_, sl:

@@ -55,10 +55,13 @@ def paged_prefix_prefill_attention_impl(q, k_suf, v_suf, k_pages, v_pages,
                                         block_tables, prefix_lens,
                                         suffix_lens, *,
                                         use_ref: bool = False):
-    """Un-jitted dispatch for prefix-aware suffix-prefill attention.
+    """Un-jitted dispatch for variable-prefix suffix-prefill attention.
 
-    Called from inside the already-traced ``models.transformer``
-    suffix-prefill layer scan (same rationale as
+    ``prefix_lens`` is per-row and may be 0 — the single-dispatch
+    admission wave (DESIGN.md §12) runs radix misses and hits through
+    one call; a pure-miss wave passes a width-1 null ``block_tables`` so
+    neither backend streams dead prefix pages.  Called from inside the
+    already-traced ``models.transformer`` layer scan (same rationale as
     :func:`paged_decode_attention_impl`: the jit cache stays keyed at the
     engine's entry point).  Direct callers should use
     :func:`paged_prefix_prefill_attention`."""

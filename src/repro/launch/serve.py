@@ -66,8 +66,9 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     """Continuous paged serving for real on CPU: MagnusService drives
     admission (prediction + block accounting) against the same
     BlockAllocator the engine stores KV pages in (DESIGN.md §8).  The
-    engine admits whole scheduler batches through one bucketed prefill
-    (``join_many``) and decodes in fused multi-step windows (§9).  With
+    engine admits whole scheduler batches as single-dispatch variable-
+    prefix waves (``join_many``, §12) and decodes in fused multi-step
+    windows (§9).  With
     ``prefix_cache`` the service's LCP-aware footprints and the engine's
     ref-counted radix-shared instruction pages use ONE RadixPrefixCache
     (§10-§11)."""
@@ -118,6 +119,9 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
             if engine.prefix_cache else 0,
             "prefix_misses": engine.prefix_cache.misses
             if engine.prefix_cache else 0,
+            "prefill_dispatches": engine.prefill_dispatches,
+            "prefill_tokens": engine.prefill_tokens,
+            "cow_copies": engine.cow_copies,
             "host_syncs": engine.host_syncs,
             "host_syncs_per_token": round(
                 engine.host_syncs / max(total_tokens, 1), 4),

@@ -114,6 +114,32 @@ def prefill_suffix(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
         act_dtype=act_dtype)
 
 
+def prefill_wave(params, cfg: ModelConfig, pages, state,
+                 batch: Dict[str, Any], *, rules=None,
+                 act_dtype=jnp.bfloat16):
+    """Single-dispatch variable-prefix admission wave (paged families
+    only; DESIGN.md §12): copy-on-write clones + suffix prefill with
+    per-row ``prefix_lens`` (0 = miss) + token-granular suffix-KV
+    scatter + per-slot engine-state update, all in one call.
+
+    batch: {"tokens": [B, S] suffix ids (a miss's suffix is its whole
+    prompt), "lengths": [B] valid suffix counts (>= 1), "prefix_lens":
+    [B], "attn_tables": [B, W] prefix-gather tables (W = 1 all-null for
+    a pure-miss wave), "tables": [B, M] full block tables (scatter +
+    state), "write_lens": [B] (0 drops the row), "cow_src"/"cow_dst":
+    [B], "slots": [B], "row_sel": [B], "positions": [B] seed decode
+    positions}.  state: {"tables", "positions", "active", "logits"}
+    (donated by jitted callers).  Returns (pages, state)."""
+    return transformer.prefill_wave(
+        params, cfg, pages, state, tokens=batch["tokens"],
+        lengths=batch["lengths"], prefix_lens=batch["prefix_lens"],
+        attn_tables=batch["attn_tables"], tables=batch["tables"],
+        write_lens=batch["write_lens"], cow_src=batch["cow_src"],
+        cow_dst=batch["cow_dst"], slots=batch["slots"],
+        row_sel=batch["row_sel"], positions=batch["positions"],
+        rules=rules, act_dtype=act_dtype)
+
+
 def decode_step_paged(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
                       *, rules=None, act_dtype=jnp.bfloat16):
     """batch: {"tokens": [B], "positions": [B], "block_tables": [B, M]}."""

@@ -627,6 +627,52 @@ def prefill_suffix(params, cfg: ModelConfig, pages, tokens, lengths,
     return last, kv
 
 
+def prefill_wave(params, cfg: ModelConfig, pages, state, *, tokens,
+                 lengths, prefix_lens, attn_tables, tables, write_lens,
+                 cow_src, cow_dst, slots, row_sel, positions, rules=None,
+                 act_dtype=jnp.bfloat16):
+    """Single-dispatch variable-prefix admission wave (DESIGN.md §12).
+
+    One jitted call admits a whole wave of requests with ANY per-row
+    cached-prefix length — a radix miss is just ``prefix_lens[b] = 0`` —
+    by chaining four device steps that used to be separate dispatches:
+
+    1. **Copy-on-write clones** — ``pages[:, cow_dst] = pages[:, cow_src]``
+       (matched partial tail blocks; ``(null, null)`` pads are the null
+       block rewriting itself).
+    2. **Variable-prefix prefill** — :func:`prefill_suffix` over the
+       wave's suffix tokens: causal attention over (gathered prefix
+       pages ‖ suffix K/V) with per-row ``prefix_lens``.  ``attn_tables``
+       is the gather table — callers pass a width-1 all-null table for a
+       pure-miss wave so the oracle/kernel streams no dead prefix pages.
+    3. **Suffix-KV scatter** — token-granular at each row's offset
+       (:func:`write_suffix_pages_batched`); rows with ``write_lens == 0``
+       (batch pads, warmup) drop entirely.
+    4. **Slot-state update** — one scatter per engine array (block
+       tables, seed positions, active mask, seed logits).  Pad rows
+       repeat row 0's slot *and* values, so the undefined duplicate-
+       scatter winner is moot.
+
+    ``state`` is ``{"tables", "positions", "active", "logits"}`` and is
+    **donated** together with ``pages`` by the engine's jitted wrapper:
+    admission updates the pools and the per-slot engine state in place,
+    with zero host read-backs.  Returns ``(pages, state)``."""
+    pages = copy_pages(pages, cow_src, cow_dst)
+    logits, kv = prefill_suffix(params, cfg, pages, tokens, lengths,
+                                prefix_lens, attn_tables, rules=rules,
+                                act_dtype=act_dtype)
+    pages = write_suffix_pages_batched(pages, kv, tables, prefix_lens,
+                                       write_lens)
+    state = {
+        "tables": state["tables"].at[slots].set(tables),
+        "positions": state["positions"].at[slots].set(positions),
+        "active": state["active"].at[slots].set(True),
+        "logits": state["logits"].at[slots].set(
+            logits[row_sel].astype(state["logits"].dtype)),
+    }
+    return pages, state
+
+
 def decode_step_paged(params, cfg: ModelConfig, pages, tokens, positions,
                       block_tables, *, rules=None, act_dtype=jnp.bfloat16):
     """tokens: [B] new ids; positions: [B] tokens already cached;

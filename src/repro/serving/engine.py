@@ -82,7 +82,13 @@ def _jitted(cfg: ModelConfig, dtype):
     """One jitted entry-point set per (config, dtype), shared by every
     engine instance: re-creating an engine must not re-compile (the
     recompile-audit tier counts on this), and benchmark comparisons
-    between engines stay warm-cache on both sides."""
+    between engines stay warm-cache on both sides.
+
+    ``prefill_wave`` is the paged engines' single admission entry point
+    (DESIGN.md §12): COW clones + variable-prefix prefill + suffix-KV
+    scatter + slot-state update in ONE dispatch, with the page pools and
+    the per-slot engine arrays donated — admission never copies the pool
+    and never reads anything back."""
     return {
         "prefill": jax.jit(
             functools.partial(M.prefill, cfg=cfg, act_dtype=dtype),
@@ -98,8 +104,14 @@ def _jitted(cfg: ModelConfig, dtype):
             functools.partial(M.decode_multi_paged, cfg=cfg,
                               act_dtype=dtype),
             static_argnames=("num_steps",)),
-        "prefill_suffix": jax.jit(
-            functools.partial(M.prefill_suffix, cfg=cfg, act_dtype=dtype)),
+        "prefill_wave": jax.jit(
+            functools.partial(M.prefill_wave, cfg=cfg, act_dtype=dtype),
+            donate_argnames=("pages", "state")),
+        # grow-path COW clones (decode side): donated so the in-place
+        # page copy never duplicates the pool — §12's full-span
+        # publishing makes every request clone its published tail at
+        # its first grow, so this runs once per request, not rarely
+        "copy_pages": jax.jit(M.copy_pages, donate_argnames=("pages",)),
     }
 
 
@@ -331,11 +343,27 @@ class PagedContinuousEngine:
     suffix prefill appends into it; the same clone step guards the
     decode grow path when a published partial tail would be appended to
     (``cow_copies`` counts both).  Every admission *publishes* its
-    shareable instruction span at every block boundary, so a head-only
-    hit's private tail becomes an exact hit for the next same-template
+    shareable span at every block boundary, so a head-only hit's
+    private tail becomes an exact hit for the next same-template
     request.  Finish/evict drop per-request references; shared pages
     free only when radix leaf-LRU eviction reclaims them under pool
     pressure *and* no live table references them.
+
+    Admission itself is a **single-dispatch variable-prefix wave**
+    (DESIGN.md §12): hits and misses ride one jitted ``prefill_wave``
+    call per suffix-length bucket — a miss is just ``prefix_len = 0``
+    against a width-1 null gather table — and the call folds the COW
+    page copies, the suffix-KV scatter and the per-slot state update
+    into the same dispatch over donated buffers.  The wave is ordered
+    **radix-aware**: requests matching a chain published earlier in the
+    same wave admit one dispatch *generation* later, after the chain's
+    KV is written, converting same-wave duplicate templates from N full
+    prefills into one full + (N-1) suffix prefills.  The shareable span
+    covers the whole prompt (instruction AND user input, §12), so
+    byte-identical retries hit end-to-end and prefill one token; radix
+    tree inserts are deferred off the admission hot path and flushed
+    between waves (``_flush_publishes``), keeping a pure-miss cache-on
+    wave as fast as cache-off.
     """
 
     def __init__(self, cfg: ModelConfig, params=None, *, seed: int = 0,
@@ -371,8 +399,8 @@ class PagedContinuousEngine:
         self.params = params if params is not None else M.init_params(
             cfg, jax.random.PRNGKey(seed))
         jt = _jitted(cfg, dtype)
-        self._prefill = jt["prefill"]
-        self._prefill_suffix = jt["prefill_suffix"]
+        self._prefill_wave = jt["prefill_wave"]
+        self._copy_pages = jt["copy_pages"]
         self._decode_multi = jt["decode_multi_paged"]
         self.pages = M.init_paged_cache(
             cfg, self.allocator.num_blocks, self.bt,
@@ -390,9 +418,22 @@ class PagedContinuousEngine:
         self.host_syncs = 0
         self.decode_steps = 0
         self.prefill_tokens = 0   # tokens actually run through a prefill
+        self.prefill_dispatches = 0  # variable-prefix wave dispatches
         self.cow_copies = 0       # copy-on-write block clones performed
         self.window_stats: Optional[Dict[str, int]] = None
         self.generated: Dict[int, List[int]] = {}   # finished req -> tokens
+        # admission hot-path memo: encoded prompt ids per (instruction,
+        # user_input) — LMaaS traffic re-uses templates and retries
+        # whole prompts, and encoding is measurable against a wave
+        self._ids_memo: Dict[Tuple[str, str], List[int]] = {}
+        # radix publishes deferred off the admission hot path: queued at
+        # reserve time, inserted into the tree by the next engine
+        # operation that reads it or frees blocks (_flush_publishes)
+        self._publish_queue: List[Tuple[Tuple[int, ...], List[int]]] = []
+        # chains published earlier in the CURRENT admission wave (tree
+        # inserts still pending): later same-wave requests share them and
+        # dispatch one generation later, after the KV is written
+        self._wave_pending: List[Dict[str, object]] = []
         if warmup:
             self.warmup()
 
@@ -405,18 +446,83 @@ class PagedContinuousEngine:
     def num_active(self) -> int:
         return sum(a is not None for a in self.active)
 
+    _IDS_MEMO_CAP = 4096   # bound the prompt memo: unique-prompt traffic
+                           # must not grow engine memory without limit
+
     def _prompt_ids(self, req: Request) -> List[int]:
-        return encode(f"{req.instruction} {req.user_input}",
-                      self.cfg.vocab_size)[:self.max_len]
+        key = (req.instruction, req.user_input)
+        ids = self._ids_memo.get(key)
+        if ids is None:
+            ids = encode(f"{req.instruction} {req.user_input}",
+                         self.cfg.vocab_size)[:self.max_len]
+            if len(self._ids_memo) >= self._IDS_MEMO_CAP:
+                # FIFO eviction (dict insertion order): recent retries
+                # stay hot, a long-dead prompt goes first
+                del self._ids_memo[next(iter(self._ids_memo))]
+            self._ids_memo[key] = ids
+        return ids
 
     def _shareable_ids(self, req: Request, ids: List[int]) -> List[int]:
-        """Token ids of ``req``'s shareable span: the *instruction* head
-        of the prompt, capped one short of the full prompt (a prefill
-        needs >= 1 query token to produce logits).  The radix cache
-        matches and publishes at most this span — user-input tokens are
-        per-request and never enter the tree."""
-        instr = encode(req.instruction, self.cfg.vocab_size)
-        return ids[:min(len(instr), len(ids) - 1)]
+        """Token ids of ``req``'s shareable span: the WHOLE prompt —
+        instruction and user input — capped one short of its end (a
+        prefill needs >= 1 query token to produce logits).
+
+        §10-§11 capped the span at the instruction; §12 publishes the
+        full prompt at block boundaries so byte-identical retries (retry
+        storms re-sending the same prompt) hit end-to-end and prefill a
+        single token.  Same-template-different-input traffic is
+        unchanged: the radix walk stops at the instruction/input
+        divergence point, and per-request input leaves are reclaimed by
+        the ordinary leaf-LRU under pool pressure."""
+        return ids[:len(ids) - 1]
+
+    def _match_wave_pending(self, share_ids: List[int],
+                            beat: int) -> Optional[Dict[str, object]]:
+        """Longest full-block prefix of ``share_ids`` among chains
+        published earlier in the CURRENT wave (radix-aware scheduling,
+        DESIGN.md §12).  Full blocks only — the publisher's pages are
+        written by its own dispatch, so a mid-block share would clone a
+        page that holds nothing yet.  Only a strictly longer match than
+        the tree's ``beat`` wins: a resident chain needs no generation
+        delay."""
+        best: Optional[Dict[str, object]] = None
+        best_tokens = beat
+        s1 = share_ids[1] if len(share_ids) > 1 else None
+        for e in self._wave_pending:
+            ids = e["ids"]
+            # two-token gate (every prompt starts with BOS): skip the
+            # LCP loop for chains whose LCP stops at token two and so
+            # cannot reach the one-full-block floor (bt >= 2)
+            if s1 is not None and self.bt > 1 and len(ids) > 1 \
+                    and ids[1] != s1:
+                continue
+            n = 0
+            for a, b in zip(ids, share_ids):
+                if a != b:
+                    break
+                n += 1
+            n = n // self.bt * self.bt
+            if n >= self.bt and n > best_tokens:
+                best_tokens = n
+                best = {"tokens": n, "blocks": e["table"][:n // self.bt],
+                        "gen": int(e["gen"]) + 1}
+        return best
+
+    def _flush_publishes(self) -> None:
+        """Insert queued shareable spans into the radix tree.
+
+        Publishing is deferred off the admission hot path — a pure-miss
+        wave pays ~zero radix bookkeeping while admitting (the §12
+        hit-rate-0 criterion: cache-on is never slower than cache-off) —
+        and flushed by the next engine operation that reads the tree
+        (:meth:`join` / :meth:`join_many`) or can free blocks
+        (:meth:`step_window`, :meth:`_evict`), so a queued span's table
+        blocks are always still live when the insert retains them."""
+        if self.prefix_cache is None or not self._publish_queue:
+            return
+        queue, self._publish_queue = self._publish_queue, []
+        for ids, table in queue:
+            self.prefix_cache.insert(ids, table)
 
     def reserve_tokens(self, req: Request,
                        n_prompt: Optional[int] = None) -> int:
@@ -443,7 +549,10 @@ class PagedContinuousEngine:
     def can_admit(self, req: Request) -> bool:
         """Would :meth:`join` succeed right now?  Counts free blocks plus
         what cache eviction could reclaim, minus the fully-shared blocks
-        a radix hit would not need to claim."""
+        a radix hit would not need to claim.  Flushes deferred publishes
+        first, exactly like :meth:`join` — the answer must reflect the
+        same tree state the join it predicts would see."""
+        self._flush_publishes()
         if None not in self.active:
             return False
         ids = self._prompt_ids(req)
@@ -461,23 +570,31 @@ class PagedContinuousEngine:
 
     def _reserve(self, req: Request) -> Dict[str, object]:
         """Claim a slot + blocks for ``req`` (raises EngineFull) and mark
-        the slot active; the KV pages are written by the caller's batched
-        (full or suffix) prefill.
+        the slot active; the KV pages are written by the caller's
+        variable-prefix wave dispatch.
 
         Admission state machine with the radix cache on:
 
         1. *match* — walk the tree for the longest cached prefix of the
            shareable span; pin the matched node's path (LRU-protected
-           while the admission is in flight).
+           while the admission is in flight).  Chains published earlier
+           in the SAME wave (tree inserts pending) also match at
+           full-block granularity; winning against the tree costs one
+           dispatch *generation* — the sharer prefills after the
+           publisher's KV is written (radix-aware wave scheduling).
         2. *probe* — the request claims ``blocks_needed(reserve) -
            match.full_blocks`` new blocks; if the pool is short, evict
            cold cache leaves first, else refuse (``EngineFull``, match
            counters rolled back so retries don't inflate them).
         3. *share* — matched pages head the new table (ref-counted).
-        4. *copy-on-write* — a match ending mid-block swaps the shared
-           partial tail for a private clone (the device page copy runs
-           in the caller's batched prefill step).
+        4. *copy-on-write* — a tree match ending mid-block swaps the
+           shared partial tail for a private clone (the device page copy
+           runs inside the wave dispatch).
         5. *allocate* — fresh blocks for suffix + predicted generation.
+        6. *queue publish* — the shareable span and the table's leading
+           blocks go on the deferred publish queue (and the wave-pending
+           list for same-wave sharers); the tree insert itself runs off
+           the hot path (:meth:`_flush_publishes`).
         """
         if None not in self.active:
             raise EngineFull(f"all {self.slots} slots occupied")
@@ -485,15 +602,27 @@ class PagedContinuousEngine:
         ids = self._prompt_ids(req)
         share_ids: List[int] = []
         m: Optional[PrefixMatch] = None
+        pend: Optional[Dict[str, object]] = None
         looked_up = False
         if self.prefix_cache is not None:
             share_ids = self._shareable_ids(req, ids)
             if share_ids:
                 m = self.prefix_cache.match(share_ids)
                 looked_up = True
+                tree_tokens = m.tokens if m.node is not None else 0
                 if m.node is None:
                     m = None
-        cached = m.tokens if m is not None else 0
+                pend = self._match_wave_pending(share_ids, beat=tree_tokens)
+                if pend is not None:
+                    if m is None:
+                        # the walk called it a miss; the same-wave chain
+                        # makes it a hit
+                        self.prefix_cache.misses -= 1
+                        self.prefix_cache.hits += 1
+                    m = None            # the pending chain supersedes it
+        gen = int(pend["gen"]) if pend is not None else 0
+        cached = (int(pend["tokens"]) if pend is not None
+                  else m.tokens if m is not None else 0)
         full = cached // self.bt * self.bt   # memory actually shared
         want = self.reserve_tokens(req, n_prompt=len(ids))
         if m is not None:
@@ -507,11 +636,14 @@ class PagedContinuousEngine:
                         f"{need} new blocks wanted, "
                         f"{len(self.allocator.free)} free")
             cow = None
-            if m is not None:
+            if pend is not None:
+                # full blocks only, held live by the publisher's table
+                self.allocator.share(slot, pend["blocks"])
+            elif m is not None:
                 self.allocator.share(slot, m.blocks)
                 if cached % self.bt:
-                    # the suffix prefill appends into the matched partial
-                    # tail: clone it (device copy in _prefill_suffixes)
+                    # the wave's suffix prefill appends into the matched
+                    # partial tail: clone it (device copy in the wave)
                     cow = self.allocator.cow_if_not_appendable(
                         slot, len(m.blocks) - 1)
             table = list(self.allocator.allocate(slot, want))
@@ -521,181 +653,137 @@ class PagedContinuousEngine:
             if looked_up:
                 # a refused admission is retried later: don't let the
                 # retry loop inflate the published hit/miss counters
-                if m is not None:
+                if m is not None or pend is not None:
                     self.prefix_cache.hits -= 1
                 else:
                     self.prefix_cache.misses -= 1
             raise
+        if self.prefix_cache is not None and share_ids:
+            self._publish_queue.append((tuple(share_ids), list(table)))
+            self._wave_pending.append(
+                {"ids": share_ids, "table": list(table), "gen": gen})
         self.active[slot] = {"req": req, "generated": [],
                              "target": min(req.gen_length, self.max_gen),
                              "prefix": m.node if m is not None else None}
-        return {"slot": slot, "ids": ids, "share_ids": share_ids,
-                "table": table, "cached": cached, "cow": cow, "req": req}
+        return {"slot": slot, "ids": ids, "table": table, "cached": cached,
+                "cow": cow, "gen": gen, "req": req}
 
-    def _scatter_slot_state(self, admitted: List[Dict[str, object]],
-                            logits) -> None:
-        """Batched per-slot engine-state update (tables, positions,
-        active mask, seed logits) — one scatter per array.  Pad rows
-        repeat row 0's *index and values*: the duplicate scatter writes
-        are identical, so the undefined winner is moot."""
-        n = len(admitted)
-        nb = logits.shape[0]
-        slots = np.zeros(nb, np.int32)
-        rows = np.full((nb, self.max_blocks), self.null_block, np.int32)
-        pos_vals = np.ones(nb, np.int32)
-        sel = np.zeros(nb, np.int32)
-        for i, a in enumerate(admitted):
-            slots[i] = a["slot"]
-            rows[i, :len(a["table"])] = a["table"]
-            pos_vals[i] = len(a["ids"])
-            sel[i] = i
-        slots[n:] = slots[0]
-        rows[n:] = rows[0]
-        pos_vals[n:] = pos_vals[0]
-        idx = jnp.asarray(slots)
-        self.tables = self.tables.at[idx].set(jnp.asarray(rows))
-        self.positions = self.positions.at[idx].set(jnp.asarray(pos_vals))
-        self.active_mask = self.active_mask.at[idx].set(True)
-        # pad logits rows carry garbage from the dummy tokens; re-select
-        # row 0 for them so the duplicate writes stay identical
-        self.logits = self.logits.at[idx].set(
-            logits[jnp.asarray(sel)].astype(self.dtype))
-        for a in admitted:
-            self.pos_host[a["slot"]] = len(a["ids"])
+    def _dispatch_wave(self, plans: List[Dict[str, object]]) -> None:
+        """ONE jitted dispatch for a group of just-reserved requests
+        sharing a suffix-length bucket: copy-on-write clones, the
+        variable-prefix prefill (per-row ``prefix_lens``; a miss is
+        ``prefix_len = 0``), the token-granular suffix-KV scatter, and
+        the per-slot engine-state update all run inside the single
+        donated wave call — the pool and the slot arrays are updated in
+        place and nothing is read back.
 
-    def _prefill_full(self, admitted: List[Dict[str, object]]) -> None:
-        """One batched bucketed prefill for just-reserved cache-miss
-        requests: prompts pad to a common bucket, the batch rows pad to a
-        power of two (pad rows scatter into the null block), all KV lands
-        in the pool via one batched scatter per pool, and the per-slot
-        engine state updates in one scatter per array — admission costs
-        O(1) dispatches, not O(n).  With the prefix cache enabled, each
-        miss then *publishes* its instruction span into the radix tree
-        at every block boundary — full blocks as chain nodes, a
-        mid-block instruction tail as a partial leaf (identical for
-        every request of the app, since K/V at position i depend only on
-        token i and its absolute position)."""
-        n = len(admitted)
+        The prefix-gather table is width-1 all-null for a pure-miss
+        group (the oracle/kernel then streams no dead prefix pages and
+        the wave costs exactly what the old dense prefill did) and the
+        full ``max_blocks`` table otherwise.  Pad rows repeat row 0's
+        slot and values; their KV scatter drops via ``write_lens == 0``.
+        """
+        n = len(plans)
         nb = _pow2_ceil(n)
-        pad = _bucket(max(len(a["ids"]) for a in admitted))
-        tokens = np.zeros((nb, pad), np.int64)
+        sb = _bucket(max(len(p["ids"]) - p["cached"] for p in plans))
+        width = self.max_blocks if any(p["cached"] for p in plans) else 1
+        tokens = np.zeros((nb, sb), np.int32)
         lengths = np.ones(nb, np.int32)
-        for i, a in enumerate(admitted):
-            ids = a["ids"]
-            tokens[i, :len(ids)] = ids
-            lengths[i] = len(ids)
-            self.prefill_tokens += len(ids)
-        logits, cache = self._prefill(
-            self.params,
-            batch={"tokens": jnp.asarray(tokens),
-                   "lengths": jnp.asarray(lengths)})
-        self.pages = M.write_prefill_pages_batched(
-            self.pages, cache["kv"], [a["table"] for a in admitted],
-            null_block=self.null_block, pad_to=self.max_blocks)
-        self._scatter_slot_state(admitted, logits)
-        self._publish(admitted)
-
-    def _publish(self, admitted: List[Dict[str, object]]) -> None:
-        """Insert every admitted request's shareable instruction span
-        into the radix tree (all block boundaries; idempotent per
-        content).  Hits publish too: a head-only hit's private tail
-        blocks turn the next same-template request into an exact hit."""
-        if self.prefix_cache is None:
-            return
-        for a in admitted:
-            if a["share_ids"]:
-                self.prefix_cache.insert(a["share_ids"], a["table"])
-
-    def _prefill_suffixes(self, admitted: List[Dict[str, object]]) -> None:
-        """Batched *suffix* prefill for radix hits: only the tokens past
-        the match run through the model, at position offset
-        ``match.tokens`` (any offset — block-aligned or mid-block),
-        attending to the shared prefix pages through the block table.
-
-        Three device steps, each one dispatch for the whole wave:
-
-        1. **Copy-on-write clones** — matched partial tail blocks are
-           copied ``src -> dst`` (the clone must hold the prefix KV
-           *before* the suffix attention gathers it).
-        2. **Suffix prefill** — causal attention over (gathered prefix
-           pages ‖ suffix K/V) with per-row ``prefix_lens``.
-        3. **Suffix-KV scatter** — token-granular at the row's offset
-           (``write_suffix_pages_batched``): slots before the offset —
-           the copied prefix KV inside a clone — are never touched.
-
-        Each hit then publishes its instruction span's new boundaries
-        (the part past the match) into the tree."""
-        n = len(admitted)
-        nb = _pow2_ceil(n)
-        src = np.full(nb, self.null_block, np.int32)
-        dst = np.full(nb, self.null_block, np.int32)
-        have_cow = False
-        for i, a in enumerate(admitted):
-            if a["cow"] is not None:
-                src[i], dst[i] = a["cow"]
-                have_cow = True
-                self.cow_copies += 1
-        if have_cow:
-            self.pages = M.copy_pages(self.pages, jnp.asarray(src),
-                                      jnp.asarray(dst))
-        pad = _bucket(max(len(a["ids"]) - a["cached"] for a in admitted))
-        tokens = np.zeros((nb, pad), np.int64)
-        lengths = np.ones(nb, np.int32)
-        wlens = np.zeros(nb, np.int32)      # scatter validity: pads drop
+        wlens = np.zeros(nb, np.int32)       # scatter validity: pads drop
         plens = np.zeros(nb, np.int32)
         rows = np.full((nb, self.max_blocks), self.null_block, np.int32)
-        for i, a in enumerate(admitted):
-            sfx = a["ids"][a["cached"]:]
+        src = np.full(nb, self.null_block, np.int32)
+        dst = np.full(nb, self.null_block, np.int32)
+        slots = np.zeros(nb, np.int32)
+        sel = np.zeros(nb, np.int32)
+        pos_vals = np.ones(nb, np.int32)
+        for i, p in enumerate(plans):
+            sfx = p["ids"][p["cached"]:]
             tokens[i, :len(sfx)] = sfx
             lengths[i] = len(sfx)
             wlens[i] = len(sfx)
-            plens[i] = a["cached"]
-            rows[i, :len(a["table"])] = a["table"]
+            plens[i] = p["cached"]
+            rows[i, :len(p["table"])] = p["table"]
+            slots[i] = p["slot"]
+            sel[i] = i
+            pos_vals[i] = len(p["ids"])
+            if p["cow"] is not None:
+                src[i], dst[i] = p["cow"]
+                self.cow_copies += 1
             self.prefill_tokens += len(sfx)
-        # pad rows repeat row 0 for the attention gather (valid indices);
-        # the KV scatter drops them via wlens == 0
+        # pad rows repeat row 0's slot/table/position (identical duplicate
+        # scatter writes) and keep plens[0] for a valid attention gather
         plens[n:] = plens[0]
         rows[n:] = rows[0]
-        rows_j = jnp.asarray(rows)
-        plens_j = jnp.asarray(plens)
-        logits, kv = self._prefill_suffix(
-            self.params, pages=self.pages,
-            batch={"tokens": jnp.asarray(tokens),
-                   "lengths": jnp.asarray(lengths),
-                   "prefix_lens": plens_j,
-                   "block_tables": rows_j})
-        self.pages = M.write_suffix_pages_batched(
-            self.pages, kv, rows_j, plens_j, jnp.asarray(wlens),
-            null_block=self.null_block)
-        self._scatter_slot_state(admitted, logits)
-        self._publish(admitted)
+        slots[n:] = slots[0]
+        pos_vals[n:] = pos_vals[0]
+        attn = (rows[:, :width] if width > 1
+                else np.full((nb, 1), self.null_block, np.int32))
+        state = {"tables": self.tables, "positions": self.positions,
+                 "active": self.active_mask, "logits": self.logits}
+        # np arrays go to the jitted call as-is: jit batches the
+        # host->device transfers (one device_put for the whole batch
+        # dict beats eleven eager asarray round-trips)
+        self.pages, state = self._prefill_wave(
+            self.params, pages=self.pages, state=state,
+            batch={"tokens": tokens, "lengths": lengths,
+                   "prefix_lens": plens, "attn_tables": attn,
+                   "tables": rows, "write_lens": wlens,
+                   "cow_src": src, "cow_dst": dst, "slots": slots,
+                   "row_sel": sel, "positions": pos_vals})
+        self.tables = state["tables"]
+        self.positions = state["positions"]
+        self.active_mask = state["active"]
+        self.logits = state["logits"]
+        self.prefill_dispatches += 1
+        for p in plans:
+            self.pos_host[p["slot"]] = len(p["ids"])
 
     def _prefill_admitted(self, admitted: List[Dict[str, object]]) -> None:
-        """Dispatch just-reserved requests to the right prefill: radix
-        misses run the full-prompt batched prefill; hits run the
-        suffix-only batched prefill (COW clones first).  Both classes
-        publish their instruction span into the tree afterwards."""
-        misses = [a for a in admitted if not a["cached"]]
-        hits = [a for a in admitted if a["cached"]]
-        if misses:
-            self._prefill_full(misses)
-        if hits:
-            self._prefill_suffixes(hits)
+        """Order the wave radix-aware and dispatch it with the minimum
+        number of variable-prefix prefill calls (DESIGN.md §12):
+
+        - **generations** first: a request sharing a chain published
+          earlier in the SAME wave dispatches one generation later, after
+          the publisher's KV has been written (publish-then-admit —
+          same-wave duplicate templates prefill their suffix only,
+          instead of N full prompts);
+        - **suffix-length buckets** within a generation: hits and misses
+          ride the same dispatch (a miss is ``prefix_len = 0``), so a
+          mixed wave whose rows pad to one bucket costs exactly one
+          prefill dispatch — the §10 path paid two.
+        """
+        gens: Dict[int, List[Dict[str, object]]] = {}
+        for a in admitted:
+            gens.setdefault(int(a["gen"]), []).append(a)
+        for g in sorted(gens):
+            buckets: Dict[int, List[Dict[str, object]]] = {}
+            for a in gens[g]:
+                buckets.setdefault(
+                    _bucket(max(len(a["ids"]) - a["cached"], 1)),
+                    []).append(a)
+            for sb in sorted(buckets):
+                self._dispatch_wave(buckets[sb])
 
     def join(self, req: Request) -> int:
+        self._flush_publishes()
+        self._wave_pending = []
         plan = self._reserve(req)
         self._prefill_admitted([plan])
         return int(plan["slot"])
 
     def join_many(self, reqs: Iterable[Request]) -> int:
-        """Admit the longest admissible prefix of ``reqs`` with one
-        batched prefill dispatch per admission class — full-prompt for
-        radix misses, suffix-only for hits (≤ 2 total; exactly 1 with
-        the cache disabled; hits with a mid-block match add one batched
-        copy-on-write page-copy dispatch).  Returns how many were
-        admitted (the caller pops that many).  Stops at the first
-        request that does not fit (FIFO admission, same discipline as
-        repeated ``join``)."""
+        """Admit the longest admissible prefix of ``reqs`` as ONE
+        admission wave: radix-aware ordering (same-wave chain sharers
+        admit a generation after their chain's publisher), then one
+        variable-prefix prefill dispatch per (generation × suffix-length
+        bucket) — exactly 1 for a wave whose suffixes share a bucket,
+        hits and misses alike.  Returns how many were admitted (the
+        caller pops that many).  Stops at the first request that does
+        not fit (FIFO admission, same discipline as repeated ``join``).
+        """
+        self._flush_publishes()
+        self._wave_pending = []
         admitted = []
         for req in reqs:
             try:
@@ -724,6 +812,7 @@ class PagedContinuousEngine:
             self.prefix_cache.unpin(node)
 
     def _evict(self, slot: int) -> Request:
+        self._flush_publishes()   # queued spans reference live tables only
         req = self.active[slot]["req"]
         self._unpin_prefix(slot)
         self.allocator.free_seq(slot)     # shared prefix pages survive:
@@ -832,6 +921,10 @@ class PagedContinuousEngine:
         requeued by the caller (they restart from scratch on readmit)."""
         if not any(a is not None for a in self.active):
             return [], [], 0
+        # deferred radix publishes land here — between admission waves,
+        # off the admission hot path, and before any grow/evict/finish
+        # could free a queued span's blocks
+        self._flush_publishes()
         evicted: List[Request] = []
         try:
             for slot, a in enumerate(self.active):
@@ -850,9 +943,7 @@ class PagedContinuousEngine:
                         dst = np.full(npairs, self.null_block, np.int32)
                         for i, (s, d) in enumerate(pairs):
                             src[i], dst[i] = s, d
-                        self.pages = M.copy_pages(self.pages,
-                                                  jnp.asarray(src),
-                                                  jnp.asarray(dst))
+                        self.pages = self._copy_pages(self.pages, src, dst)
         except MemoryError as e:
             # don't strand requests evicted earlier in this same step:
             # hand them to the caller on the exception for requeue
@@ -904,21 +995,38 @@ class PagedContinuousEngine:
 
     # -- warmup (recompile audit) --------------------------------------------
 
-    def warmup(self, *, prompt_buckets: Optional[List[int]] = None,
+    def warmup(self, *, suffix_buckets: Optional[List[int]] = None,
                batch_sizes: Optional[List[int]] = None,
                windows: Optional[List[int]] = None) -> None:
-        """Pre-compile the serve path: prefill at every (batch-bucket,
-        prompt-bucket) shape and the fused decode at every power-of-two
-        window, so a mixed-length workload triggers zero mid-serve
-        compiles (see tests/test_recompile.py)."""
-        if prompt_buckets is None:
+        """Pre-compile the serve path: the variable-prefix wave at every
+        (batch-bucket × suffix-bucket) shape and the fused decode at
+        every power-of-two window, so a mixed-length workload triggers
+        zero mid-serve compiles (see tests/test_recompile.py).
+
+        The unified wave shrinks the §10 warmup grid: one entry point
+        replaces the dense prefill, the suffix prefill, AND the
+        per-shape eager-op ensemble each of them dragged along (page
+        scatter, suffix scatter, COW page copy, four slot-state
+        updates).  With the prefix cache on, each (batch, suffix) shape
+        compiles twice — the width-1 null prefix-gather table a
+        pure-miss wave uses and the full ``max_blocks`` table of a
+        mixed/hit wave; with the cache off, only the width-1 variant
+        exists.
+
+        Wave warmup calls write nothing: ``write_lens == 0`` drops every
+        scatter row, the COW pairs clone the null block onto itself, and
+        the slot-state update runs against sacrificial copies of the
+        slot arrays (the donated buffers must not be the engine's live
+        state).  ``pages`` rides through donated-and-reassigned, its
+        contents untouched."""
+        if suffix_buckets is None:
             top = _bucket(self.max_len)
-            prompt_buckets = [b for b in _BUCKETS if b <= top]
+            suffix_buckets = [b for b in _BUCKETS if b <= top]
             nxt = _BUCKETS[-1] * 2          # pow2 tail for max_len > table
             while nxt <= top:
-                prompt_buckets.append(nxt)
+                suffix_buckets.append(nxt)
                 nxt *= 2
-            prompt_buckets = prompt_buckets or [top]
+            suffix_buckets = suffix_buckets or [top]
         if batch_sizes is None:
             batch_sizes, n = [], 1
             while n < self.slots:
@@ -930,59 +1038,47 @@ class PagedContinuousEngine:
             while k <= max(self.max_gen, 1):
                 windows.append(k)
                 k <<= 1
+        widths = [1] + ([self.max_blocks]
+                        if self.prefix_cache is not None else [])
         for nb in batch_sizes:
-            idx = jnp.asarray(np.zeros(nb, np.int32))
-            for pb in prompt_buckets:
-                logits, cache = self._prefill(self.params, batch={
-                    "tokens": jnp.asarray(np.zeros((nb, pb), np.int64)),
-                    "lengths": jnp.asarray(np.ones(nb, np.int32))})
-                # admission-side eager ops, shapes keyed on (nb, pb): the
-                # batched page scatter (all-null tables -> junk lands in
-                # the null block) and the batched slot-state updates;
-                # results discarded, so no engine state changes
-                M.write_prefill_pages_batched(
-                    self.pages, cache["kv"], [[] for _ in range(nb)],
-                    null_block=self.null_block, pad_to=self.max_blocks)
-                self.logits.at[idx].set(logits[idx].astype(self.dtype))
-                if self.prefix_cache is not None:
-                    # suffix buckets mirror prompt buckets: a hit's
-                    # suffix prefill must also never compile mid-serve
-                    null_tables = jnp.tile(self._null_row[None, :], (nb, 1))
-                    slogits, skv = self._prefill_suffix(
-                        self.params, pages=self.pages,
-                        batch={"tokens": jnp.asarray(
-                                   np.zeros((nb, pb), np.int64)),
-                               "lengths": jnp.asarray(
-                                   np.ones(nb, np.int32)),
-                               "prefix_lens": jnp.asarray(
-                                   np.zeros(nb, np.int32)),
-                               "block_tables": null_tables})
-                    # token-granular suffix scatter (zero write lengths:
-                    # everything drops) and the admission-wave COW page
-                    # copy, both shape-keyed on this (nb, pb) grid
-                    M.write_suffix_pages_batched(
-                        self.pages, skv, null_tables,
-                        jnp.asarray(np.zeros(nb, np.int32)),
-                        jnp.asarray(np.zeros(nb, np.int32)),
-                        null_block=self.null_block)
-                    nulls = jnp.asarray(
-                        np.full(nb, self.null_block, np.int32))
-                    M.copy_pages(self.pages, nulls, nulls)
-                    self.logits.at[idx].set(slogits[idx].astype(self.dtype))
-            self.tables.at[idx].set(jnp.tile(self._null_row[None, :],
-                                             (nb, 1)))
-            self.positions.at[idx].set(jnp.asarray(np.zeros(nb, np.int32)))
-            self.active_mask.at[idx].set(True)
+            zeros = np.zeros(nb, np.int32)
+            nulls = np.full(nb, self.null_block, np.int32)
+            for sb in suffix_buckets:
+                for w in widths:
+                    # batch arrays are np, exactly like _dispatch_wave's
+                    # staging: the jit cache keys on avals, so warmup and
+                    # serve must build them identically
+                    state = {"tables": jnp.array(self.tables),
+                             "positions": jnp.array(self.positions),
+                             "active": jnp.array(self.active_mask),
+                             "logits": jnp.array(self.logits)}
+                    self.pages, _ = self._prefill_wave(
+                        self.params, pages=self.pages, state=state,
+                        batch={"tokens": np.zeros((nb, sb), np.int32),
+                               "lengths": np.ones(nb, np.int32),
+                               "prefix_lens": zeros,
+                               "attn_tables": np.full(
+                                   (nb, w), self.null_block, np.int32),
+                               "tables": np.full(
+                                   (nb, self.max_blocks),
+                                   self.null_block, np.int32),
+                               "write_lens": zeros,
+                               "cow_src": nulls,
+                               "cow_dst": nulls,
+                               "slots": zeros,
+                               "row_sel": zeros,
+                               "positions": zeros})
         # the int-indexed per-slot variants used by _release and _grow
         self.tables.at[0].set(self._null_row)
         self.positions.at[0].set(0)
         self.active_mask.at[0].set(False)
         if self.prefix_cache is not None:
             # grow-path COW copies pad to a power of two <= slots
+            # (donated: null -> null clones leave the pool unchanged)
             k = 1
             while k <= _pow2_ceil(self.slots):
-                nulls = jnp.asarray(np.full(k, self.null_block, np.int32))
-                M.copy_pages(self.pages, nulls, nulls)
+                nulls = np.full(k, self.null_block, np.int32)
+                self.pages = self._copy_pages(self.pages, nulls, nulls)
                 k <<= 1
         for k in windows:
             # results discarded: a discarded window only writes junk into

@@ -26,6 +26,7 @@ must append into it (copy-on-write).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
@@ -309,13 +310,29 @@ class RadixPrefixCache:
             blocks.append(child.block)
             matched += bt
         # partial extension: longest common prefix into any partial leaf
-        # or full child at this depth
+        # or full child at this depth.  Two-token gate: a non-starter's
+        # LCP is 0, and the root fans out to every published chain (§12
+        # publishes whole prompts, so stale per-request chains accumulate
+        # until LRU eviction) — admission must not pay an LCP call per
+        # candidate on the pure-miss hot path.  Two tokens, because at
+        # the root every chain starts with BOS and one token gates
+        # nothing.
         rest = tuple(token_ids[matched:])
         best, best_len = None, 0
-        for cand in list(node.partials.values()) + list(node.children.values()):
-            l = _lcp(cand.tokens, rest)
-            if l > best_len:
-                best, best_len = cand, l
+        if rest:
+            r0 = rest[0]
+            r1 = rest[1] if len(rest) > 1 else None
+            for group in (node.partials, node.children):
+                for cand in group.values():
+                    ct = cand.tokens
+                    if ct[0] != r0:
+                        continue              # LCP would be 0
+                    if r1 is not None and len(ct) > 1 and ct[1] != r1:
+                        l = 1                 # LCP stops at token two
+                    else:
+                        l = _lcp(ct, rest)
+                    if l > best_len:
+                        best, best_len = cand, l
         if best is not None:
             node = best
             blocks.append(best.block)
@@ -436,35 +453,48 @@ class RadixPrefixCache:
 
     # -- eviction ------------------------------------------------------------
 
-    def _lru_leaf(self) -> Optional[RadixNode]:
-        best = None
-        for n in self.nodes():
-            if n.is_leaf and n.pins == 0:
-                if best is None or n.last_used < best.last_used:
-                    best = n
-        return best
+    def _evict_node(self, victim: RadixNode) -> None:
+        parent = victim.parent
+        key = victim.tokens
+        if len(key) == self.allocator.block_tokens:
+            del parent.children[key]
+        else:
+            del parent.partials[key]
+        self.allocator.release([victim.block])
+        self.evicted += 1
 
     def evict_until(self, free_blocks: int) -> bool:
         """Evict unpinned leaves (oldest use first) until the allocator
         has ``free_blocks`` free blocks; returns success.  Evicting a
         leaf releases the cache's reference — the block only frees if no
         live table shares it — and may expose its parent as the next
-        eviction candidate.  Each eviction re-scans the tree for the LRU
-        leaf (O(nodes) per leaf): fine at instruction-template scale
-        (tens of chains); an intrusive leaf LRU list would be the
-        upgrade if the tree ever indexes per-request content."""
+        eviction candidate.
+
+        One tree walk seeds a heap of evictable leaves; evicting a leaf
+        pushes its parent when it becomes an unpinned leaf, so freeing E
+        blocks costs O(N + E log N), not the O(E·N) of a per-leaf
+        rescan.  That matters since §12: publishing whole prompt spans
+        means the tree indexes per-request content, and under pool
+        pressure eviction runs on the admission path with O(num_blocks)
+        resident nodes.  A node's ``last_used`` never changes while
+        evicting (touches happen on match/insert), so heap order stays
+        exact: each pop is the globally-oldest evictable leaf, the same
+        victim the rescan picked."""
+        if len(self.allocator.free) >= free_blocks:
+            return True
+        heap = [(n.last_used, id(n), n) for n in self.nodes()
+                if n.is_leaf and n.pins == 0]
+        heapq.heapify(heap)
         while len(self.allocator.free) < free_blocks:
-            victim = self._lru_leaf()
-            if victim is None:
+            if not heap:
                 return False
+            _, _, victim = heapq.heappop(heap)
+            self._evict_node(victim)
             parent = victim.parent
-            key = victim.tokens
-            if len(key) == self.allocator.block_tokens:
-                del parent.children[key]
-            else:
-                del parent.partials[key]
-            self.allocator.release([victim.block])
-            self.evicted += 1
+            if parent is not self.root and parent.is_leaf \
+                    and parent.pins == 0:
+                heapq.heappush(heap,
+                               (parent.last_used, id(parent), parent))
         return True
 
 

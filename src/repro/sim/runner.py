@@ -32,20 +32,26 @@ class HostSyncCost:
     decode iteration — the pre-fusion engine; ``dispatch="fused"`` pays one
     per power-of-two window (``popcount(bg)`` windows for a ``bg``-step
     batch, mirroring ``PagedContinuousEngine.step_window``'s chunking).
-    With ``host_sync_s=0`` (the default everywhere) this wrapper is never
-    constructed and all sim numbers are unchanged."""
+
+    ``admission_dispatches`` prices the batch's *prefill* dispatches the
+    same way (DESIGN.md §12): the single-dispatch variable-prefix wave
+    pays 1 per admission wave; the pre-§12 per-class split (full-prompt
+    misses + suffix hits) paid 2.  With ``host_sync_s=0`` (the default
+    everywhere) this wrapper is never constructed and all sim numbers
+    are unchanged."""
 
     # continuous-batching iterations can't see the batch end, so fused
     # windows amortize over a nominal window instead of popcount(bg)
     NOMINAL_WINDOW = 8
 
     def __init__(self, base: CostModel, host_sync_s: float,
-                 dispatch: str = "fused"):
+                 dispatch: str = "fused", admission_dispatches: int = 1):
         if dispatch not in ("fused", "per-token"):
             raise ValueError(f"unknown dispatch {dispatch!r}")
         self._base = base
         self.host_sync_s = host_sync_s
         self.dispatch = dispatch
+        self.admission_dispatches = admission_dispatches
 
     def __getattr__(self, name):
         return getattr(self._base, name)
@@ -57,7 +63,8 @@ class HostSyncCost:
 
     def batch_serving_time(self, beta: int, bl: int, bg: int) -> float:
         return (self._base.batch_serving_time(beta, bl, bg)
-                + self._syncs(bg) * self.host_sync_s)
+                + (self._syncs(bg) + self.admission_dispatches)
+                * self.host_sync_s)
 
     def decode_iter_time(self, n_active: int, ctx: float) -> float:
         per_iter = (self.host_sync_s / self.NOMINAL_WINDOW
@@ -88,6 +95,7 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
                  train_requests: Optional[List[Request]] = None,
                  kv_dtype_bytes: int = 2,
                  host_sync_s: float = 0.0, dispatch: str = "fused",
+                 admission_dispatches: int = 1,
                  prefix_sharing: bool = False,
                  seed: int = 0) -> Metrics:
     workload = copy.deepcopy(workload)   # sims mutate finish times
@@ -104,7 +112,8 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
             f"instance; raise HardwareSpec.chips")
     cost = CostModel(cfg, hw, quantized=quant, kv_dtype_bytes=kv_dtype_bytes)
     if host_sync_s > 0.0:
-        cost = HostSyncCost(cost, host_sync_s, dispatch)
+        cost = HostSyncCost(cost, host_sync_s, dispatch,
+                            admission_dispatches=admission_dispatches)
     if strategy == "ccb":
         limit = fixed_batch_size or MemoryModel(
             cfg, hbm_bytes=hw.hbm_bytes * hw.chips,

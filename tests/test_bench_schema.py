@@ -19,7 +19,11 @@ ENGINE_KEYS = {"decode_steps", "tokens", "wall_s", "steps_per_s",
 ENGINES = {"dense_batch", "paged_per_token", "paged_fused"}
 SWEEP_KEYS = {"prefill_wall_s", "prefill_tokens_per_s", "baseline_wall_s",
               "baseline_tokens_per_s", "speedup_vs_baseline", "hits",
-              "misses"}
+              "misses", "prefill_dispatches"}
+MIXED_WAVE_KEYS = {"prefill_dispatches", "prefill_tokens", "hits",
+                   "misses", "requests"}
+RETRY_KEYS = {"requests", "first_wave_tokens", "retry_wave_tokens",
+              "retry_dispatches", "tokens_saved"}
 RADIX_MIX_KEYS = {"prefill_tokens", "exact_match_prefill_tokens",
                   "no_cache_prefill_tokens", "hits", "misses",
                   "cow_copies", "radix_nodes", "saved_vs_exact_match",
@@ -52,9 +56,10 @@ def test_bench_engine_schema_stable(bench_doc):
 
 
 def test_bench_prefix_cache_section(bench_doc):
-    """Schema v2: the prefix_cache section (hit sweep + concurrency at
-    equal Θ) rides in the same doc engine_perf writes — either suite can
-    run first, neither clobbers the other."""
+    """Schema v2-v4: the prefix_cache section (hit sweep + dispatch
+    counts + mixed wave + retry storm + concurrency at equal Θ) rides in
+    the same doc engine_perf writes — either suite can run first,
+    neither clobbers the other."""
     pc = bench_doc["prefix_cache"]
     assert set(pc["hit_rates"]) == {"0", "0.5", "1"}
     for hr, s in pc["hit_rates"].items():
@@ -63,6 +68,10 @@ def test_bench_prefix_cache_section(bench_doc):
             assert isinstance(s[k], (int, float)), (hr, k)
     assert pc["hit_rates"]["1"]["hits"] > 0
     assert pc["hit_rates"]["0"]["hits"] == 0
+    # single-dispatch admission (§12): a pure-miss wave and an all-hit
+    # wave each cost exactly ONE variable-prefix prefill dispatch
+    assert pc["hit_rates"]["0"]["prefill_dispatches"] == 1
+    assert pc["hit_rates"]["1"]["prefill_dispatches"] == 1
     assert isinstance(pc["speedup_at_hit1"], float)
     # hits reserve suffix-only blocks: never fewer admissions than the
     # no-cache baseline at the same pool (count assertion — perf wall
@@ -74,6 +83,29 @@ def test_bench_prefix_cache_section(bench_doc):
         assert k in pc["config"], k
     # the engine_perf sections survived the merge
     assert set(bench_doc["engines"]) == ENGINES
+
+
+def test_bench_mixed_wave_single_dispatch(bench_doc):
+    """Schema v4 headline (§12 tentpole, in counts): a mixed hit+miss
+    wave whose suffixes share one bucket costs EXACTLY one prefill
+    dispatch — the §10 per-class path paid two."""
+    mw = bench_doc["prefix_cache"]["mixed_wave"]
+    assert set(mw) == MIXED_WAVE_KEYS
+    assert mw["prefill_dispatches"] == 1
+    assert mw["hits"] > 0 and mw["misses"] > 0, \
+        "the single-dispatch wave must actually mix hits and misses"
+    assert mw["hits"] + mw["misses"] == mw["requests"]
+
+
+def test_bench_retry_storm_dedup(bench_doc):
+    """Schema v4 (§12 suffix-KV dedup): byte-identical retries hit
+    end-to-end — each retry prefills exactly ONE token (the query
+    position a prefill always needs), in one dispatch."""
+    rs = bench_doc["prefix_cache"]["retry_storm"]
+    assert set(rs) == RETRY_KEYS
+    assert rs["retry_wave_tokens"] == rs["requests"]
+    assert rs["first_wave_tokens"] > rs["requests"]
+    assert rs["retry_dispatches"] == 1
 
 
 def test_bench_radix_prefix_section(bench_doc):

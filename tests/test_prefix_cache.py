@@ -417,9 +417,13 @@ def test_engine_shared_pages_survive_owner_eviction(params):
                                 num_blocks=32, block_tokens=4,
                                 max_len=64, max_gen=8, prefix_cache=True)
     eng.join(reqs[0])                     # publishes 4 full prefix blocks
-    eng.join(reqs[1])                     # exact hit: shares them
+    eng.join(reqs[1])                     # instruction hit: shares them
     share_ids = eng._shareable_ids(reqs[0], eng._prompt_ids(reqs[0]))
-    blocks = list(eng.prefix_cache.match(share_ids, peek=True).blocks)
+    m = eng.prefix_cache.match(share_ids, peek=True)
+    # §12 publishes the whole prompt span: req 0's own span matches its 4
+    # full instruction blocks PLUS its private input's partial leaf; the
+    # sharer (different input) holds references on the full blocks only
+    blocks = list(m.blocks[:m.full_blocks(eng.bt)])
     assert len(blocks) == 4
     assert all(eng.allocator.refcount[b] == 3 for b in blocks)
     eng._evict(0)                         # owner evicted

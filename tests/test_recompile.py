@@ -1,9 +1,9 @@
 """Recompilation audit (ISSUE 2 satellite): single-request joins bucket
 prompt pads via ``_bucket``, so before warmup every fresh bucket compiled
 a new prefill mid-serve.  ``PagedContinuousEngine(warmup=True)`` now
-pre-compiles the whole (batch-bucket × prompt-bucket) prefill grid and
-every power-of-two fused-decode window; a mixed-length workload must then
-trigger ZERO mid-serve XLA compiles.
+pre-compiles the whole (batch-bucket × suffix-bucket) variable-prefix
+wave grid (DESIGN.md §12) and every power-of-two fused-decode window; a
+mixed-length workload must then trigger ZERO mid-serve XLA compiles.
 
 Compile counting uses ``jax.monitoring`` backend-compile events
 (``repro.testing.count_compiles``) plus the jitted entry points'
@@ -44,7 +44,7 @@ def test_warmed_engine_serves_mixed_lengths_without_recompiles(params):
     eng = PagedContinuousEngine(CFG, params=params, max_concurrency=4,
                                 num_blocks=64, block_tokens=8,
                                 max_len=64, max_gen=8, warmup=True)
-    p0 = eng._prefill._cache_size()
+    p0 = eng._prefill_wave._cache_size()
     d0 = eng._decode_multi._cache_size()
     # first serve: exercises the remaining eager update paths (uniform
     # shapes by construction, so they compile here, once)
@@ -52,7 +52,7 @@ def test_warmed_engine_serves_mixed_lengths_without_recompiles(params):
                                     word_counts=(2, 9, 30)))
     assert stats["served"] == 6
     # warmup already covered every prefill/window shape the serve needed
-    assert eng._prefill._cache_size() == p0
+    assert eng._prefill_wave._cache_size() == p0
     assert eng._decode_multi._cache_size() == d0
     # second serve: *different* prompt lengths and targets, same buckets,
     # under-predicted lengths (mid-serve table grows) — the regression
@@ -64,20 +64,20 @@ def test_warmed_engine_serves_mixed_lengths_without_recompiles(params):
                                         undershoot=True))
     assert stats["served"] == 6
     assert c["n"] == 0, f"{c['n']} XLA compiles during a warmed serve"
-    assert eng._prefill._cache_size() == p0
+    assert eng._prefill_wave._cache_size() == p0
     assert eng._decode_multi._cache_size() == d0
 
 
 def test_warmup_is_idempotent_and_bounded(params):
     """Re-running warmup adds no cache entries, and the jit cache stays
-    O(batch buckets × prompt buckets) + O(log max_gen)."""
+    O(batch buckets × suffix buckets) + O(log max_gen)."""
     eng = PagedContinuousEngine(CFG, params=params, max_concurrency=4,
                                 num_blocks=64, block_tokens=8,
                                 max_len=64, max_gen=8, warmup=True)
-    p0 = eng._prefill._cache_size()
+    p0 = eng._prefill_wave._cache_size()
     d0 = eng._decode_multi._cache_size()
     with count_compiles() as c:
         eng.warmup()
     assert c["n"] == 0
-    assert eng._prefill._cache_size() == p0
+    assert eng._prefill_wave._cache_size() == p0
     assert eng._decode_multi._cache_size() == d0

@@ -1,0 +1,236 @@
+"""Single-dispatch variable-prefix admission waves + radix-aware wave
+scheduling (DESIGN.md §12) acceptance tests:
+
+- a mixed hit+miss wave whose suffixes share one bucket costs EXACTLY
+  one prefill dispatch (the §10 per-class path paid two), and the
+  per-row ``prefix_len`` vector really mixes 0 and non-0 in that call
+- property: the wave path is stream-exact against every other admission
+  discipline — one mixed wave, per-class waves (misses then hits), and
+  sequential joins all generate identical tokens, with and without the
+  radix cache
+- radix-aware scheduling: a wave of same-template cold requests admits
+  publisher-first (publish-then-admit) — one full prefill + N-1 suffix
+  prefills instead of N full prefills — and the follower generation
+  dispatches after the chain's KV is written
+- suffix-KV dedup: a byte-identical retry hits end-to-end and prefills
+  exactly ONE token (the query position a prefill always needs)
+- deferred publishes: a pure-miss admission performs zero radix tree
+  inserts on the hot path; the tree catches up at the next window
+"""
+import copy
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.engine import PagedContinuousEngine, drive_paged
+from repro.workload.apps import make_shared_prefix_dataset
+
+CFG = get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _engine(params, *, cache=True, slots=4, blocks=128, bt=4):
+    return PagedContinuousEngine(CFG, params=params, max_concurrency=slots,
+                                 num_blocks=blocks, block_tokens=bt,
+                                 max_len=64, max_gen=8, prefix_cache=cache)
+
+
+def _reqs(n, *, n_apps, instr_words, input_words=5, gen=4, seed=0):
+    reqs = make_shared_prefix_dataset(
+        n, n_apps=n_apps, instr_words=instr_words,
+        input_words=input_words, gen_length=gen, seed=seed)
+    for i, r in enumerate(reqs):
+        r.gen_length = 2 + (i * 3) % gen
+        r.predicted_gen_length = r.gen_length
+    return reqs
+
+
+def _drain(eng):
+    while eng.num_active:
+        eng.step_window()
+
+
+# ---------------------------------------------------------------------------
+# exactly one dispatch per mixed wave
+# ---------------------------------------------------------------------------
+
+def test_mixed_wave_is_one_dispatch(params):
+    """Template hit (suffix ≈ user input) + cold short-prompt miss in
+    the same suffix bucket: ONE variable-prefix dispatch serves both,
+    with a genuinely mixed prefix_len vector (0 for the miss)."""
+    eng = _engine(params, bt=4)
+    # publish a 15-token template (instr 14 words + BOS): hits share 12
+    # full-block tokens and COW the partial tail
+    warm = _reqs(1, n_apps=1, instr_words=14, input_words=9, seed=7)
+    assert eng.join_many(copy.deepcopy(warm)) == 1
+    _drain(eng)
+    hit = _reqs(1, n_apps=1, instr_words=14, input_words=5, seed=7)
+    miss = _reqs(1, n_apps=1, instr_words=3, input_words=3, seed=99)
+    # hit suffix: 21 - 15 = 6 tokens; miss "suffix" = whole 8-token
+    # prompt — same 8-token bucket
+    d0 = eng.prefill_dispatches
+    assert eng.join_many(copy.deepcopy(hit + miss)) == 2
+    assert eng.prefill_dispatches - d0 == 1, \
+        "a single-bucket mixed hit+miss wave must cost ONE dispatch"
+    assert eng.prefix_cache.hits == 1 and eng.prefix_cache.misses >= 1
+    assert eng.cow_copies >= 1, "the hit's mid-block match must COW"
+    _drain(eng)
+    assert len(eng.generated) == 3
+
+
+def test_cache_off_wave_is_one_dispatch_per_bucket(params):
+    """With the cache disabled every wave is pure-miss: one dispatch per
+    suffix bucket, one total when the prompts share a bucket."""
+    eng = _engine(params, cache=False)
+    same = _reqs(3, n_apps=3, instr_words=9, input_words=4, seed=1)
+    d0 = eng.prefill_dispatches
+    assert eng.join_many(copy.deepcopy(same)) == 3
+    assert eng.prefill_dispatches - d0 == 1
+    _drain(eng)
+    mixed = _reqs(2, n_apps=2, instr_words=9, input_words=4, seed=2)
+    long = _reqs(1, n_apps=1, instr_words=40, input_words=9, seed=3)
+    d0 = eng.prefill_dispatches
+    assert eng.join_many(copy.deepcopy(mixed + long)) == 3
+    assert eng.prefill_dispatches - d0 == 2, \
+        "two suffix buckets -> two dispatches, never more"
+
+
+# ---------------------------------------------------------------------------
+# property: every admission discipline generates identical streams
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [11, 23, 37])
+def test_wave_stream_exact_vs_other_disciplines(params, seed):
+    """The §12 correctness property: one mixed wave, per-class waves
+    (all misses first, then all hits — the §10 discipline), sequential
+    joins, and the cache-off engine all produce identical token streams
+    for the same requests.  Varied seeds vary prompt lengths, hit/miss
+    mixes, mid-block split points and intra-wave template repeats."""
+    reqs = _reqs(6, n_apps=2, instr_words=10 + seed % 7,
+                 input_words=3 + seed % 4, gen=6, seed=seed)
+    streams = {}
+
+    def run(name, admit):
+        eng = _engine(params, cache=(name != "cache_off"), slots=6,
+                      blocks=192)
+        admit(eng)
+        _drain(eng)
+        assert len(eng.generated) == len(reqs), name
+        streams[name] = [eng.generated[r.req_id] for r in reqs]
+
+    run("wave", lambda e: e.join_many(copy.deepcopy(reqs)))
+    run("sequential", lambda e: [e.join(r) for r in copy.deepcopy(reqs)])
+    run("cache_off", lambda e: e.join_many(copy.deepcopy(reqs)))
+
+    def per_class(eng):
+        batch = copy.deepcopy(reqs)
+        # publish the first of each app, then admit the rest as one
+        # wave of guaranteed hits — the old per-class split, staged
+        seen, leaders, rest = set(), [], []
+        for r in batch:
+            (leaders if r.app not in seen else rest).append(r)
+            seen.add(r.app)
+        assert eng.join_many(leaders) == len(leaders)
+        assert eng.join_many(rest) == len(rest)
+
+    run("per_class", per_class)
+    assert streams["wave"] == streams["sequential"] \
+        == streams["per_class"] == streams["cache_off"]
+
+
+# ---------------------------------------------------------------------------
+# radix-aware wave scheduling: publish-then-admit within one wave
+# ---------------------------------------------------------------------------
+
+def test_same_wave_duplicate_templates_share_chain(params):
+    """A cold wave of N same-template requests admits radix-aware: the
+    first (publisher) prefills the full prompt, the other N-1 share its
+    just-claimed chain at full-block granularity and prefill suffixes
+    only — dispatched one generation later, after the chain's KV
+    exists.  The §10 path prefilled N full prompts."""
+    eng = _engine(params, bt=4, slots=4)
+    reqs = _reqs(3, n_apps=1, instr_words=19, input_words=4, seed=5)
+    prompts = [len(eng._prompt_ids(r)) for r in reqs]
+    shared_full = (prompts[0] - 1) // 4 * 4   # shareable span, full blocks
+    d0 = eng.prefill_dispatches
+    assert eng.join_many(copy.deepcopy(reqs)) == 3
+    assert eng.prefix_cache.hits == 2 and eng.prefix_cache.misses == 1
+    expected = prompts[0] + sum(p - shared_full for p in prompts[1:])
+    assert eng.prefill_tokens == expected, \
+        (eng.prefill_tokens, expected, prompts, shared_full)
+    # publisher generation + follower generation (same suffix bucket)
+    assert eng.prefill_dispatches - d0 == 2
+    # followers really share the publisher's physical blocks
+    t0, t1, t2 = (eng.allocator.tables[s] for s in range(3))
+    head = t0[:shared_full // 4]
+    assert t1[:len(head)] == head and t2[:len(head)] == head
+    _drain(eng)
+    assert len(eng.generated) == 3
+
+
+def test_pure_miss_wave_defers_tree_inserts(params):
+    """The hit-rate-0 satellite: admitting distinct cold templates does
+    ZERO radix-tree inserts on the hot path (publishes are queued); the
+    tree catches up at the next decode window and the next wave hits."""
+    eng = _engine(params, slots=4)
+    reqs = _reqs(3, n_apps=3, instr_words=15, input_words=4, seed=9)
+    assert eng.join_many(copy.deepcopy(reqs)) == 3
+    assert eng.prefix_cache.num_nodes == 0, \
+        "tree inserts must not run inside the admission wave"
+    assert len(eng._publish_queue) == 3
+    eng.step_window()                      # flush point
+    assert eng.prefix_cache.num_nodes > 0
+    assert not eng._publish_queue
+    _drain(eng)
+    again = _reqs(3, n_apps=3, instr_words=15, input_words=4, seed=9)
+    assert eng.join_many(copy.deepcopy(again)) == 3
+    assert eng.prefix_cache.hits == 3, "published chains must now hit"
+    _drain(eng)
+
+
+# ---------------------------------------------------------------------------
+# suffix-KV dedup: byte-identical retries
+# ---------------------------------------------------------------------------
+
+def test_byte_identical_retry_prefills_one_token(params):
+    """§12 publishes the whole prompt span, so a retry storm re-sending
+    the same prompt hits end-to-end: the retry prefills exactly one
+    token and generates the identical stream."""
+    eng = _engine(params, bt=4, slots=2)
+    req = _reqs(1, n_apps=1, instr_words=13, input_words=6, seed=4)
+    assert eng.join_many(copy.deepcopy(req)) == 1
+    first_tokens = eng.prefill_tokens
+    _drain(eng)
+    first_stream = eng.generated[req[0].req_id]
+    d0 = eng.prefill_dispatches
+    assert eng.join_many(copy.deepcopy(req)) == 1
+    assert eng.prefill_tokens - first_tokens == 1, \
+        "an end-to-end hit prefills only its query token"
+    assert eng.prefill_dispatches - d0 == 1
+    assert eng.prefix_cache.hits == 1
+    _drain(eng)
+    assert eng.generated[req[0].req_id] == first_stream
+
+
+def test_retry_wave_streams_match_cache_off(params):
+    """Retry storms through the radix engine generate the same tokens
+    the cache-off engine does — dedup changes where prompt KV comes
+    from, never what is generated."""
+    reqs = _reqs(2, n_apps=2, instr_words=11, input_words=5, seed=6)
+    out = {}
+    for cache in (False, True):
+        eng = _engine(params, cache=cache, slots=2)
+        for _ in range(3):                 # the same wave, three times
+            assert eng.join_many(copy.deepcopy(reqs)) == 2
+            _drain(eng)
+        out[cache] = [eng.generated[r.req_id] for r in reqs]
+        if cache:
+            assert eng.prefill_tokens < sum(
+                3 * len(eng._prompt_ids(r)) for r in reqs)
+    assert out[True] == out[False]
