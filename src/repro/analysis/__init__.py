@@ -1,0 +1,22 @@
+"""Static hot-path analyzer (hotlint) + runtime serve-sanitizer.
+
+``repro.analysis.sanitizer`` is stdlib-only and safe to import from the
+serving layer; ``repro.analysis.hotlint`` is the AST lint driven by
+``scripts/hotlint.py`` and the test suite.
+"""
+from repro.analysis.sanitizer import (CACHE_HOLDER, BlockLeakError,
+                                      DoubleFreeError, SanitizerError,
+                                      SharedWriteError, ShadowAllocator,
+                                      SyncLedgerError, check_allocator,
+                                      check_engine_drained, check_sync_ledger,
+                                      count_sync, hot_path, maybe_shadow,
+                                      reset_sync_ledger, sanitize_enabled,
+                                      sync_ledger)
+
+__all__ = [
+    "CACHE_HOLDER", "BlockLeakError", "DoubleFreeError", "SanitizerError",
+    "SharedWriteError", "ShadowAllocator", "SyncLedgerError",
+    "check_allocator", "check_engine_drained", "check_sync_ledger",
+    "count_sync", "hot_path", "maybe_shadow", "reset_sync_ledger",
+    "sanitize_enabled", "sync_ledger",
+]

@@ -1,0 +1,509 @@
+"""hotlint: AST-based static analyzer for the serving hot path (DESIGN.md §13).
+
+Pure stdlib — parses, never imports, the code under analysis.  The project
+model below (modules, functions, import aliases, the jax.jit registry, and
+the hot-set closure over the call graph) is shared by the rule modules in
+``repro.analysis.rules``:
+
+  HL001  implicit host sync in a hot region
+  HL002  use after donation
+  HL003  jax.jit hygiene (unhashable statics, missing donation, bad names)
+  HL004  pallas_call BlockSpec/grid consistency + §12 prefix-DMA clamp
+  HL005  suppressed sync without a ``host_syncs`` increment
+
+Hot regions are functions named ``step_window``/``prefill_wave``, functions
+decorated ``@hot_path``, and everything transitively reachable from them
+through resolvable calls (including calls through the engine's jit-handle
+attributes).  Intentional syncs carry ``# hotlint: sync(reason)``; a reason
+starting with ``uncounted:`` opts out of the HL005 counter audit (used for
+the timing barrier that deliberately doesn't count).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+HOT_SEEDS = ("step_window", "prefill_wave")
+SUPPRESS_RE = re.compile(r"#\s*hotlint:\s*sync\(([^)]*)\)")
+#: when a directory is linted, only these subpackages are walked
+SCAN_SUBDIRS = ("serving", "models", "kernels")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    func: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.rule} {self.path}:{self.line} ({self.func}) {self.message}"
+
+    def baseline_key(self) -> str:
+        # line-number free so the baseline survives unrelated edits
+        return f"{self.rule} {self.path} {self.func} {self.message}"
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int
+    reason: str
+    used: bool = False
+
+    @property
+    def counted(self) -> bool:
+        return not self.reason.strip().startswith("uncounted")
+
+
+class FuncInfo:
+    def __init__(self, module: "ModuleInfo", qualname: str,
+                 node: ast.FunctionDef, cls: Optional[str] = None) -> None:
+        self.module = module
+        self.qualname = qualname
+        self.name = node.name
+        self.node = node
+        self.cls = cls
+        self.hot = False
+        self.hot_annotated = any(
+            _dec_name(d) == "hot_path" for d in node.decorator_list)
+        self.local_aliases: Dict[str, str] = {}
+        self.registry_vars: Set[str] = set()
+        for stmt in ast.walk(node):
+            if isinstance(stmt, (ast.Import, ast.ImportFrom)):
+                _collect_aliases(stmt, self.local_aliases, module.package)
+
+    @property
+    def full(self) -> str:
+        return f"{self.module.name}.{self.qualname}"
+
+    def params(self) -> List[str]:
+        a = self.node.args
+        return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+                + [p.arg for p in a.kwonlyargs])
+
+    def pos_params(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+
+
+def _dec_name(dec: ast.expr) -> str:
+    if isinstance(dec, ast.Call):
+        return _dec_name(dec.func)
+    if isinstance(dec, ast.Attribute):
+        return dec.attr
+    if isinstance(dec, ast.Name):
+        return dec.id
+    return ""
+
+
+def _collect_aliases(stmt, out: Dict[str, str], package: str) -> None:
+    if isinstance(stmt, ast.Import):
+        for al in stmt.names:
+            out[al.asname or al.name.split(".")[0]] = (
+                al.name if al.asname else al.name.split(".")[0])
+    elif isinstance(stmt, ast.ImportFrom):
+        base = stmt.module or ""
+        if stmt.level:
+            parts = package.split(".") if package else []
+            parts = parts[:len(parts) - (stmt.level - 1)] if stmt.level > 1 \
+                else parts
+            base = ".".join(parts + ([stmt.module] if stmt.module else []))
+        for al in stmt.names:
+            if al.name == "*":
+                continue
+            out[al.asname or al.name] = f"{base}.{al.name}" if base else al.name
+
+
+class ModuleInfo:
+    def __init__(self, name: str, path: str, source: str) -> None:
+        self.name = name
+        self.path = path
+        self.package = name.rsplit(".", 1)[0] if "." in name else ""
+        self.tree = ast.parse(source, filename=path)
+        norm = path.replace(os.sep, "/")
+        self.kind = ("traced" if ("/models/" in norm or "/kernels/" in norm)
+                     else "host")
+        self.aliases: Dict[str, str] = {}
+        self.functions: Dict[str, FuncInfo] = {}
+        self.device_state: Dict[str, Tuple[str, ...]] = {}
+        self.module_assigns: Dict[str, ast.expr] = {}
+        self.suppressions: List[Suppression] = []
+        for i, line in enumerate(source.splitlines()):
+            m = SUPPRESS_RE.search(line)
+            if m:
+                self.suppressions.append(Suppression(i + 1, m.group(1)))
+        self._collect()
+
+    def _collect(self) -> None:
+        for node in self.tree.body:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                _collect_aliases(node, self.aliases, self.package)
+            elif isinstance(node, ast.FunctionDef):
+                self.functions[node.name] = FuncInfo(self, node.name, node)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.module_assigns[t.id] = node.value
+            elif isinstance(node, ast.ClassDef):
+                for item in node.body:
+                    if isinstance(item, ast.FunctionDef):
+                        q = f"{node.name}.{item.name}"
+                        self.functions[q] = FuncInfo(self, q, item, node.name)
+                    elif isinstance(item, ast.Assign):
+                        for t in item.targets:
+                            if (isinstance(t, ast.Name)
+                                    and t.id == "_DEVICE_STATE"
+                                    and isinstance(item.value, ast.Tuple)):
+                                self.device_state[node.name] = tuple(
+                                    e.value for e in item.value.elts
+                                    if isinstance(e, ast.Constant))
+
+    def suppression_for(self, stmt: ast.stmt) -> Optional[Suppression]:
+        # matches a comment inside the statement's span or on the line
+        # directly above it (the leading-comment form)
+        end = getattr(stmt, "end_lineno", stmt.lineno)
+        for s in self.suppressions:
+            if stmt.lineno - 1 <= s.line <= end:
+                return s
+        return None
+
+
+@dataclasses.dataclass
+class JitEntry:
+    key: str                      # registry key, or the jitted function name
+    target: Optional[FuncInfo]    # resolved target python function
+    donate: Tuple[str, ...]
+    static: Tuple[str, ...]
+    partial_kwargs: Tuple[str, ...]
+    line: int
+
+    def pos_params(self) -> List[str]:
+        """Positional params a *caller* binds, partial-bound names removed."""
+        if self.target is None:
+            return []
+        return [p for p in self.target.pos_params()
+                if p not in self.partial_kwargs]
+
+
+@dataclasses.dataclass
+class Resolved:
+    dotted: str
+    targets: List[FuncInfo]
+    jit: Optional[JitEntry]
+
+
+class Project:
+    def __init__(self, modules: Dict[str, ModuleInfo]) -> None:
+        self.modules = modules
+        self.func_index: Dict[str, FuncInfo] = {}
+        self.name_index: Dict[str, List[FuncInfo]] = {}
+        for m in modules.values():
+            for f in m.functions.values():
+                self.func_index[f.full] = f
+                self.name_index.setdefault(f.name, []).append(f)
+        self.registries: Dict[str, Dict[str, JitEntry]] = {}
+        self.attr_jit: Dict[Tuple[str, str, str], JitEntry] = {}
+        self.module_jits: Dict[str, JitEntry] = {}
+        self._build_jits()
+        self._bind_handles()
+        self._build_hot()
+
+    # -- jit registry -------------------------------------------------------
+
+    def _dotted(self, expr: ast.expr, aliases: Dict[str, str]) -> str:
+        if isinstance(expr, ast.Name):
+            return aliases.get(expr.id, expr.id)
+        if isinstance(expr, ast.Attribute):
+            base = self._dotted(expr.value, aliases)
+            return f"{base}.{expr.attr}" if base else ""
+        return ""
+
+    def _is_jax_jit(self, expr: ast.expr, aliases: Dict[str, str]) -> bool:
+        return self._dotted(expr, aliases) in ("jax.jit", "jit")
+
+    def _parse_jit(self, call: ast.Call, mod: ModuleInfo,
+                   key: str, target: Optional[FuncInfo] = None) -> JitEntry:
+        donate: Tuple[str, ...] = ()
+        static: Tuple[str, ...] = ()
+        partial_kwargs: Tuple[str, ...] = ()
+        if target is None and call.args:
+            fn_expr = call.args[0]
+            if (isinstance(fn_expr, ast.Call)
+                    and self._dotted(fn_expr.func, mod.aliases).endswith(
+                        "partial")):
+                partial_kwargs = tuple(k.arg for k in fn_expr.keywords
+                                       if k.arg)
+                fn_expr = fn_expr.args[0] if fn_expr.args else fn_expr
+            dotted = self._dotted(fn_expr, mod.aliases)
+            target = self.func_index.get(dotted)
+            if target is None and dotted in mod.functions:
+                target = mod.functions[dotted]
+        params = target.params() if target else []
+        pos = target.pos_params() if target else []
+        for kw in call.keywords:
+            names: Tuple[str, ...] = ()
+            if kw.arg in ("donate_argnames", "static_argnames"):
+                if isinstance(kw.value, (ast.Tuple, ast.List)):
+                    names = tuple(e.value for e in kw.value.elts
+                                  if isinstance(e, ast.Constant))
+                elif isinstance(kw.value, ast.Constant):
+                    names = (kw.value.value,)
+            elif kw.arg in ("donate_argnums", "static_argnums"):
+                nums = []
+                if isinstance(kw.value, (ast.Tuple, ast.List)):
+                    nums = [e.value for e in kw.value.elts
+                            if isinstance(e, ast.Constant)]
+                elif isinstance(kw.value, ast.Constant):
+                    nums = [kw.value.value]
+                names = tuple(pos[n] for n in nums if n < len(pos))
+            if kw.arg in ("donate_argnames", "donate_argnums"):
+                donate += names
+            elif kw.arg in ("static_argnames", "static_argnums"):
+                static += names
+        return JitEntry(key, target, donate, static, partial_kwargs,
+                        call.lineno)
+
+    def _build_jits(self) -> None:
+        for mod in self.modules.values():
+            for f in mod.functions.values():
+                # registry functions: return a dict literal of jax.jit calls
+                for node in ast.walk(f.node):
+                    if not (isinstance(node, ast.Return)
+                            and isinstance(node.value, ast.Dict)):
+                        continue
+                    entries: Dict[str, JitEntry] = {}
+                    for k, v in zip(node.value.keys, node.value.values):
+                        if (isinstance(k, ast.Constant)
+                                and isinstance(v, ast.Call)
+                                and self._is_jax_jit(v.func, mod.aliases)):
+                            entries[k.value] = self._parse_jit(v, mod, k.value)
+                    if entries:
+                        self.registries[f.full] = entries
+                # decorator-jitted functions
+                for dec in f.node.decorator_list:
+                    if (isinstance(dec, ast.Call)
+                            and self._dotted(dec.func, mod.aliases).endswith(
+                                "partial")
+                            and dec.args
+                            and self._is_jax_jit(dec.args[0], mod.aliases)):
+                        self.module_jits[f.full] = self._parse_jit(
+                            dec, mod, f.name, target=f)
+                    elif (not isinstance(dec, ast.Call)
+                          and self._is_jax_jit(dec, mod.aliases)):
+                        self.module_jits[f.full] = JitEntry(
+                            f.name, f, (), (), (), f.node.lineno)
+            # module-level NAME = jax.jit(fn, ...)
+            for name, value in mod.module_assigns.items():
+                if (isinstance(value, ast.Call)
+                        and self._is_jax_jit(value.func, mod.aliases)):
+                    self.module_jits[f"{mod.name}.{name}"] = self._parse_jit(
+                        value, mod, name)
+
+    def _registry_for_call(self, func: FuncInfo,
+                           call: ast.Call) -> Optional[Dict[str, JitEntry]]:
+        dotted = self._dotted(call.func,
+                              {**func.module.aliases, **func.local_aliases})
+        if not dotted:
+            return None
+        for full, entries in self.registries.items():
+            if full == dotted or full.endswith(f".{dotted}"):
+                return entries
+        return None
+
+    def _bind_handles(self) -> None:
+        """``jt = _jitted(...)`` locals and ``self.x = jt[key]`` bindings."""
+        for mod in self.modules.values():
+            for func in mod.functions.values():
+                handles: Dict[str, Dict[str, JitEntry]] = {}
+                for stmt in ast.walk(func.node):
+                    if not isinstance(stmt, ast.Assign):
+                        continue
+                    v = stmt.value
+                    if isinstance(v, ast.Call):
+                        entries = self._registry_for_call(func, v)
+                        if entries:
+                            for t in stmt.targets:
+                                if isinstance(t, ast.Name):
+                                    handles[t.id] = entries
+                                    func.registry_vars.add(t.id)
+                    if (isinstance(v, ast.Subscript)
+                            and isinstance(v.value, ast.Name)
+                            and v.value.id in handles
+                            and isinstance(v.slice, ast.Constant)):
+                        entry = handles[v.value.id].get(v.slice.value)
+                        if entry is None:
+                            continue
+                        for t in stmt.targets:
+                            if (isinstance(t, ast.Attribute)
+                                    and isinstance(t.value, ast.Name)
+                                    and t.value.id == "self" and func.cls):
+                                self.attr_jit[(mod.name, func.cls,
+                                               t.attr)] = entry
+                            elif isinstance(t, ast.Name):
+                                func.registry_vars.add(t.id)  # rare alias
+                # remember handles for call resolution in this function
+                func._handles = handles  # type: ignore[attr-defined]
+
+    # -- call resolution ----------------------------------------------------
+
+    def resolve_call(self, func: FuncInfo, call: ast.Call) -> Resolved:
+        aliases = {**func.module.aliases, **func.local_aliases}
+        f = call.func
+        handles = getattr(func, "_handles", {})
+        # jt["key"](...)
+        if (isinstance(f, ast.Subscript) and isinstance(f.value, ast.Name)
+                and f.value.id in handles
+                and isinstance(f.slice, ast.Constant)):
+            entry = handles[f.value.id].get(f.slice.value)
+            return Resolved("", [], entry)
+        if isinstance(f, ast.Name):
+            n = f.id
+            if n in func.module.functions and n in aliases:
+                pass  # a local def shadows nothing here; fall through
+            if n in func.module.functions:
+                return Resolved(n, [func.module.functions[n]], None)
+            dotted = aliases.get(n)
+            if dotted:
+                tgt = self.func_index.get(dotted)
+                jit = self.module_jits.get(dotted)
+                return Resolved(dotted, [tgt] if tgt else [], jit)
+            jit = self.module_jits.get(f"{func.module.name}.{n}")
+            return Resolved(n, [], jit)
+        if isinstance(f, ast.Attribute):
+            parts = _flatten(f)
+            if parts and parts[0] == "self" and func.cls:
+                if len(parts) == 2:
+                    attr = parts[1]
+                    jit = self.attr_jit.get(
+                        (func.module.name, func.cls, attr))
+                    if jit:
+                        return Resolved(f"self.{attr}", [], jit)
+                    tgt = func.module.functions.get(f"{func.cls}.{attr}")
+                    if tgt:
+                        return Resolved(f"self.{attr}", [tgt], None)
+                return Resolved(
+                    ".".join(parts),
+                    [t for t in self.name_index.get(parts[-1], ())
+                     if t.cls is not None], None)
+            if parts and parts[0] in aliases:
+                dotted = ".".join([aliases[parts[0]]] + parts[1:])
+                tgt = self.func_index.get(dotted)
+                jit = self.module_jits.get(dotted)
+                return Resolved(dotted, [tgt] if tgt else [], jit)
+            if parts:
+                # method call through a local object: match by terminal name
+                return Resolved(
+                    ".".join(parts),
+                    [t for t in self.name_index.get(parts[-1], ())
+                     if t.cls is not None], None)
+        return Resolved("", [], None)
+
+    # -- hot set ------------------------------------------------------------
+
+    def _build_hot(self) -> None:
+        work: List[FuncInfo] = []
+        for f in self.func_index.values():
+            if f.name in HOT_SEEDS or f.hot_annotated:
+                f.hot = True
+                work.append(f)
+        while work:
+            f = work.pop()
+            for node in ast.walk(f.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                rc = self.resolve_call(f, node)
+                targets = list(rc.targets)
+                if rc.jit and rc.jit.target:
+                    targets.append(rc.jit.target)
+                for t in targets:
+                    if t is not None and not t.hot:
+                        t.hot = True
+                        work.append(t)
+
+
+def _flatten(expr: ast.expr) -> List[str]:
+    parts: List[str] = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        parts.append(expr.id)
+        return list(reversed(parts))
+    return []
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+            continue
+        for sub in SCAN_SUBDIRS:
+            root = os.path.join(p, sub)
+            if not os.path.isdir(root):
+                continue
+            for dirpath, _dirs, files in os.walk(root):
+                out.extend(os.path.join(dirpath, f)
+                           for f in sorted(files) if f.endswith(".py"))
+    return sorted(set(out))
+
+
+def _module_name(path: str) -> str:
+    norm = os.path.abspath(path).replace(os.sep, "/")
+    stem = norm[:-3] if norm.endswith(".py") else norm
+    if "/repro/" in stem:
+        return "repro." + stem.split("/repro/", 1)[1].replace("/", ".")
+    return os.path.basename(stem)
+
+
+def build_project(paths: Sequence[str]) -> Project:
+    modules: Dict[str, ModuleInfo] = {}
+    for path in iter_py_files(paths):
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+        name = _module_name(path)
+        rel = os.path.relpath(path)
+        modules[name] = ModuleInfo(name, rel, source)
+    return Project(modules)
+
+
+def run_rules(project: Project) -> List[Finding]:
+    from repro.analysis import rules
+    findings: List[Finding] = []
+    for rule in rules.ALL_RULES:
+        findings.extend(rule.check(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def lint(paths: Sequence[str]) -> List[Finding]:
+    return run_rules(build_project(paths))
+
+
+def collect_sync_sites(paths: Sequence[str]) -> Set[Tuple[str, str]]:
+    """Static counterpart of the runtime sync ledger: the (file basename,
+    function name) sites carrying a *counted* ``# hotlint: sync`` comment."""
+    from repro.analysis.rules import host_sync
+    project = build_project(paths)
+    host_sync.check(project)
+    sites: Set[Tuple[str, str]] = set()
+    for path, func, counted in host_sync.suppressed_sites(project):
+        if counted:
+            sites.add((os.path.basename(path), func))
+    return sites
+
+
+def load_baseline(path: Optional[str]) -> Set[str]:
+    if not path or not os.path.exists(path):
+        return set()
+    with open(path, "r", encoding="utf-8") as fh:
+        return {line.strip() for line in fh
+                if line.strip() and not line.startswith("#")}

@@ -1,0 +1,6 @@
+"""hotlint rule modules; each exposes ``check(project) -> List[Finding]``."""
+from repro.analysis.rules import donation, host_sync, jit_hygiene, pallas
+
+ALL_RULES = (host_sync, donation, jit_hygiene, pallas)
+
+__all__ = ["ALL_RULES", "donation", "host_sync", "jit_hygiene", "pallas"]

@@ -1,0 +1,146 @@
+"""HL002: use after donation.
+
+Linear dataflow over each function: an argument passed to a jitted call
+under ``donate_argnames``/``donate_argnums`` is dead afterwards (jax hands
+its buffer to the output), unless the same statement rebinds it.  Any later
+read is a use-after-donation — on CPU/TPU it raises
+``RuntimeError: Array has been deleted`` at best and aliases freed memory
+at worst.  Loop bodies are walked twice so a donation at the bottom of the
+loop reaches a read at the top.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.hotlint import Finding, FuncInfo, JitEntry, Project
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for func in project.func_index.values():
+        scan = _DonationScan(project, func)
+        scan.run()
+        findings.extend(scan.findings)
+    return findings
+
+
+def donated_args(entry: JitEntry, call: ast.Call) -> List[Tuple[str, ast.expr]]:
+    """(param, arg expr) pairs for the donated arguments of ``call``."""
+    out: List[Tuple[str, ast.expr]] = []
+    pos = entry.pos_params()
+    for i, a in enumerate(call.args):
+        if i < len(pos) and pos[i] in entry.donate:
+            out.append((pos[i], a))
+    for kw in call.keywords:
+        if kw.arg in entry.donate:
+            out.append((kw.arg, kw.value))
+    return out
+
+
+def _key(expr: ast.expr):
+    if isinstance(expr, ast.Name):
+        return f"n:{expr.id}"
+    if (isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self"):
+        return f"a:self.{expr.attr}"
+    return None
+
+
+class _DonationScan:
+    def __init__(self, project: Project, func: FuncInfo) -> None:
+        self.p = project
+        self.f = func
+        self.findings: List[Finding] = []
+        self.dead: Dict[str, Tuple[int, str]] = {}   # key -> (line, jit key)
+        self._seen: Set[Tuple[int, str]] = set()
+
+    def run(self) -> None:
+        self.walk_body(self.f.node.body)
+
+    def walk_body(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            self.visit(stmt)
+
+    def visit(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        self._check_reads(stmt)
+        donated = self._donations(stmt)
+        targets = self._targets(stmt)
+        for key, (line, jkey) in donated.items():
+            if key not in targets:
+                self.dead[key] = (line, jkey)
+        for key in targets:
+            self.dead.pop(key, None)
+        for sub in self._sub_bodies(stmt):
+            if isinstance(stmt, (ast.For, ast.While)):
+                self.walk_body(sub)
+                self.walk_body(sub)
+            else:
+                self.walk_body(sub)
+
+    def _check_reads(self, stmt: ast.stmt) -> None:
+        if not self.dead:
+            return
+        from repro.analysis.rules.host_sync import _header_exprs
+        for expr in _header_exprs(stmt):
+            for node in ast.walk(expr):
+                if isinstance(node, (ast.Name, ast.Attribute)) and isinstance(
+                        getattr(node, "ctx", None), ast.Load):
+                    key = _key(node)
+                    if key in self.dead:
+                        line, jkey = self.dead.pop(key)
+                        name = key.split(":", 1)[1]
+                        pretty = name if not name.startswith("self.") else name
+                        self._add(node.lineno,
+                                  f"'{pretty}' read after being donated to "
+                                  f"jit '{jkey}' at line {line}")
+
+    def _donations(self, stmt: ast.stmt) -> Dict[str, Tuple[int, str]]:
+        from repro.analysis.rules.host_sync import _header_exprs
+        out: Dict[str, Tuple[int, str]] = {}
+        for expr in _header_exprs(stmt):
+            for node in ast.walk(expr):
+                if not isinstance(node, ast.Call):
+                    continue
+                rc = self.p.resolve_call(self.f, node)
+                if rc.jit is None or not rc.jit.donate:
+                    continue
+                for _param, arg in donated_args(rc.jit, node):
+                    key = _key(arg)
+                    if key is not None:
+                        out[key] = (node.lineno, rc.jit.key)
+        return out
+
+    def _targets(self, stmt: ast.stmt) -> Set[str]:
+        out: Set[str] = set()
+
+        def add(t) -> None:
+            key = _key(t)
+            if key is not None:
+                out.add(key)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                for e in t.elts:
+                    add(e)
+
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                add(t)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            add(stmt.target)
+        elif isinstance(stmt, ast.For):
+            add(stmt.target)
+        return out
+
+    def _sub_bodies(self, stmt: ast.stmt) -> List[List[ast.stmt]]:
+        from repro.analysis.rules.host_sync import _sub_bodies
+        return _sub_bodies(stmt)
+
+    def _add(self, line: int, message: str) -> None:
+        if (line, message) in self._seen:
+            return
+        self._seen.add((line, message))
+        self.findings.append(Finding("HL002", self.f.module.path, line,
+                                     self.f.qualname, message))

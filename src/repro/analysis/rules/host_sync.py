@@ -1,0 +1,328 @@
+"""HL001/HL005: implicit host syncs in hot regions.
+
+Statement-order taint tracking over each hot function.  In host modules
+(``serving/``) device taint enters through jax/jnp calls, jit-handle calls,
+and the class's ``_DEVICE_STATE`` attributes; in traced modules
+(``models/``, ``kernels/``) every array-ish parameter is tainted.  Sync
+triggers on tainted values: ``int()``/``float()``/``bool()``, ``.item()``/
+``.tolist()``, any ``numpy.*`` call, ``block_until_ready``/``device_get``,
+and (host side only) iteration or branching.  A trigger under a
+``# hotlint: sync(reason)`` comment is intentional — but unless the reason
+starts with ``uncounted:`` it must sit within two statements of a
+``host_syncs`` increment, else HL005.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set, Tuple
+
+from repro.analysis.hotlint import Finding, FuncInfo, Project
+
+_UNTAINT_ATTRS = ("shape", "dtype", "ndim", "size")
+_SKIP_PARAMS = {"self", "cls", "cfg", "rules"}
+_PROPAGATING_BUILTINS = {
+    "list", "tuple", "sorted", "min", "max", "sum", "any", "all", "zip",
+    "enumerate", "range", "abs", "map", "filter", "dict", "set", "reversed",
+}
+
+
+def check(project: Project) -> List[Finding]:
+    return _analyze(project)[0]
+
+
+def suppressed_sites(project: Project) -> List[Tuple[str, str, bool]]:
+    return _analyze(project)[1]
+
+
+def _analyze(project: Project):
+    cached = getattr(project, "_sync_cache", None)
+    if cached is not None:
+        return cached
+    findings: List[Finding] = []
+    sites: List[Tuple[str, str, bool]] = []
+    for func in project.func_index.values():
+        if func.hot:
+            scan = _SyncScan(project, func)
+            scan.run()
+            findings.extend(scan.findings)
+            sites.extend(scan.sites)
+    project._sync_cache = (findings, sites)  # type: ignore[attr-defined]
+    return findings, sites
+
+
+class _SyncScan:
+    def __init__(self, project: Project, func: FuncInfo) -> None:
+        self.p = project
+        self.f = func
+        self.mod = func.module
+        self.host = self.mod.kind == "host"
+        self.findings: List[Finding] = []
+        self.sites: List[Tuple[str, str, bool]] = []
+        self._seen: Set[Tuple[str, int, str]] = set()
+        self.taint: Set[str] = set()
+        if func.cls:
+            for attr in self.mod.device_state.get(func.cls, ()):
+                self.taint.add(f"a:{attr}")
+        if not self.host:
+            args = func.node.args
+            const_default_kwonly = {
+                p.arg for p, d in zip(args.kwonlyargs, args.kw_defaults)
+                if d is not None and isinstance(d, ast.Constant)}
+            # params annotated as plain python scalars (shape ints, flags)
+            # are static-like, not device arrays
+            scalar_annotated = {
+                p.arg for p in args.posonlyargs + args.args + args.kwonlyargs
+                if _scalar_annotation(p.annotation)}
+            for name in func.params() + (
+                    [args.vararg.arg] if args.vararg else []):
+                if name not in _SKIP_PARAMS \
+                        and name not in const_default_kwonly \
+                        and name not in scalar_annotated:
+                    self.taint.add(f"n:{name}")
+
+    def run(self) -> None:
+        self.walk_body(self.f.node.body)
+
+    # -- taint --------------------------------------------------------------
+
+    def tainted(self, e) -> bool:
+        if isinstance(e, ast.Name):
+            return f"n:{e.id}" in self.taint
+        if isinstance(e, ast.Attribute):
+            if e.attr in _UNTAINT_ATTRS:
+                return False
+            if isinstance(e.value, ast.Name) and e.value.id == "self":
+                return f"a:{e.attr}" in self.taint
+            return self.tainted(e.value)
+        if isinstance(e, ast.Subscript):
+            return self.tainted(e.value)
+        if isinstance(e, ast.Call):
+            return self.call_tainted(e)
+        if isinstance(e, ast.BinOp):
+            return self.tainted(e.left) or self.tainted(e.right)
+        if isinstance(e, ast.UnaryOp):
+            return self.tainted(e.operand)
+        if isinstance(e, ast.BoolOp):
+            return any(self.tainted(v) for v in e.values)
+        if isinstance(e, ast.Compare):
+            return (self.tainted(e.left)
+                    or any(self.tainted(c) for c in e.comparators))
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.tainted(x) for x in e.elts)
+        if isinstance(e, ast.Dict):
+            return any(self.tainted(v) for v in e.values if v is not None)
+        if isinstance(e, ast.IfExp):
+            return self.tainted(e.body) or self.tainted(e.orelse)
+        if isinstance(e, ast.Starred):
+            return self.tainted(e.value)
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return self.tainted(e.elt) or any(
+                self.tainted(g.iter) for g in e.generators)
+        return False
+
+    def _args_tainted(self, call: ast.Call) -> bool:
+        return (any(self.tainted(a) for a in call.args)
+                or any(self.tainted(k.value) for k in call.keywords))
+
+    def call_tainted(self, call: ast.Call) -> bool:
+        rc = self.p.resolve_call(self.f, call)
+        if rc.jit is not None:
+            return True
+        root = rc.dotted.split(".")[0] if rc.dotted else ""
+        if root == "jax":
+            return not rc.dotted.endswith("device_get")
+        if root == "numpy":
+            return False          # host result; the trigger is flagged
+        if isinstance(call.func, ast.Name):
+            n = call.func.id
+            if n in ("int", "float", "bool", "len", "str", "repr"):
+                return False
+            if n in _PROPAGATING_BUILTINS:
+                return self._args_tainted(call)
+        if isinstance(call.func, ast.Attribute):
+            if call.func.attr in ("item", "tolist"):
+                return False      # host result; trigger flagged separately
+            if self.tainted(call.func.value):
+                return True       # method on a device value (astype, .at ...)
+        if rc.targets:
+            if any(t.module.kind == "traced" for t in rc.targets):
+                return True       # model/kernel code returns device arrays
+            return self._args_tainted(call)
+        return self._args_tainted(call)
+
+    # -- triggers -----------------------------------------------------------
+
+    def check_call(self, call: ast.Call, ctx) -> None:
+        fn = call.func
+        if (isinstance(fn, ast.Name) and fn.id in ("int", "float", "bool")
+                and self._args_tainted(call)):
+            self._flag(ctx, call.lineno,
+                       f"{fn.id}() forces a host sync on a traced value")
+            return
+        if isinstance(fn, ast.Attribute):
+            if (fn.attr in ("item", "tolist")
+                    and self.tainted(fn.value)):
+                self._flag(ctx, call.lineno,
+                           f".{fn.attr}() forces a host sync")
+                return
+            if fn.attr == "block_until_ready":
+                self._flag(ctx, call.lineno,
+                           "block_until_ready is an explicit host sync")
+                return
+        rc = self.p.resolve_call(self.f, call)
+        root = rc.dotted.split(".")[0] if rc.dotted else ""
+        if root == "numpy" and self._args_tainted(call):
+            self._flag(ctx, call.lineno,
+                       f"{rc.dotted.split('.', 1)[1]}() copies a traced "
+                       f"value to host")
+        elif rc.dotted == "jax.device_get":
+            self._flag(ctx, call.lineno,
+                       "jax.device_get is an explicit host sync")
+
+    # -- statement walk -----------------------------------------------------
+
+    def walk_body(self, body: List[ast.stmt]) -> None:
+        for i, stmt in enumerate(body):
+            self.visit(stmt, body, i)
+
+    def visit(self, stmt: ast.stmt, body, i) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        ctx = (body, i, stmt)
+        for expr in _header_exprs(stmt):
+            for node in ast.walk(expr):
+                if isinstance(node, ast.Call):
+                    self.check_call(node, ctx)
+                elif self.host and isinstance(
+                        node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+                    for g in node.generators:
+                        if self.tainted(g.iter):
+                            self._flag(ctx, node.lineno,
+                                       "iterating over a traced value")
+        if self.host:
+            if isinstance(stmt, ast.For) and self.tainted(stmt.iter):
+                self._flag(ctx, stmt.lineno,
+                           "iterating over a traced value")
+            elif (isinstance(stmt, (ast.If, ast.While))
+                  and self.tainted(stmt.test)):
+                self._flag(ctx, stmt.lineno, "branching on a traced value")
+        self._apply_assign(stmt)
+        for sub in _sub_bodies(stmt):
+            if isinstance(stmt, (ast.For, ast.While)):
+                self.walk_body(sub)   # twice: catch late-taint-early-use
+                self.walk_body(sub)
+            else:
+                self.walk_body(sub)
+
+    def _apply_assign(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            vt = self.tainted(stmt.value)
+            for t in stmt.targets:
+                self._assign(t, vt)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._assign(stmt.target, self.tainted(stmt.value))
+        elif isinstance(stmt, ast.AugAssign):
+            vt = self.tainted(stmt.value) or self.tainted(stmt.target)
+            self._assign(stmt.target, vt)
+        elif isinstance(stmt, ast.For):
+            self._assign(stmt.target, self.tainted(stmt.iter))
+
+    def _assign(self, target, vt: bool) -> None:
+        key = None
+        if isinstance(target, ast.Name):
+            key = f"n:{target.id}"
+        elif (isinstance(target, ast.Attribute)
+              and isinstance(target.value, ast.Name)
+              and target.value.id == "self"):
+            key = f"a:{target.attr}"
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign(e, vt)
+            return
+        if key is not None:
+            (self.taint.add if vt else self.taint.discard)(key)
+
+    # -- reporting ----------------------------------------------------------
+
+    def _flag(self, ctx, line: int, message: str) -> None:
+        body, i, stmt = ctx
+        sup = self.mod.suppression_for(stmt)
+        if sup is not None:
+            sup.used = True
+            self.sites.append((self.mod.path, self.f.name, sup.counted))
+            if sup.counted and not _has_increment(body, i):
+                self._add("HL005", sup.line,
+                          f"suppressed sync '{sup.reason.strip()}' has no "
+                          f"host_syncs increment within two statements")
+            return
+        self._add("HL001", line, message)
+
+    def _add(self, rule: str, line: int, message: str) -> None:
+        key = (rule, line, message)
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.append(Finding(rule, self.mod.path, line,
+                                     self.f.qualname, message))
+
+
+def _scalar_annotation(ann) -> bool:
+    """``n: int``-style annotations (incl. ``Optional[int]`` / ``"int"``)."""
+    scalars = ("int", "float", "bool", "str")
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value in scalars
+    if isinstance(ann, ast.Name):
+        return ann.id in scalars
+    if isinstance(ann, ast.Subscript) and isinstance(ann.value, ast.Name) \
+            and ann.value.id == "Optional":
+        return _scalar_annotation(ann.slice)
+    return False
+
+
+def _has_increment(body, i) -> bool:
+    for stmt in body[i:i + 3]:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.AugAssign):
+                t = node.target
+                if (isinstance(t, ast.Name) and t.id == "host_syncs") or (
+                        isinstance(t, ast.Attribute)
+                        and t.attr == "host_syncs"):
+                    return True
+    return False
+
+
+def _header_exprs(stmt: ast.stmt) -> List[ast.expr]:
+    if isinstance(stmt, ast.Assign):
+        return [stmt.value] + list(stmt.targets)
+    if isinstance(stmt, ast.AnnAssign):
+        return [stmt.value] if stmt.value else []
+    if isinstance(stmt, ast.AugAssign):
+        return [stmt.value, stmt.target]
+    if isinstance(stmt, (ast.Expr, ast.Return)):
+        return [stmt.value] if stmt.value else []
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, ast.For):
+        return [stmt.iter]
+    if isinstance(stmt, ast.With):
+        return [item.context_expr for item in stmt.items]
+    if isinstance(stmt, ast.Assert):
+        return [stmt.test] + ([stmt.msg] if stmt.msg else [])
+    if isinstance(stmt, ast.Raise):
+        return [e for e in (stmt.exc, stmt.cause) if e]
+    if isinstance(stmt, ast.Delete):
+        return list(stmt.targets)
+    return []
+
+
+def _sub_bodies(stmt: ast.stmt) -> List[List[ast.stmt]]:
+    out: List[List[ast.stmt]] = []
+    for field in ("body", "orelse", "finalbody"):
+        sub = getattr(stmt, field, None)
+        if sub and isinstance(sub[0], ast.stmt):
+            out.append(sub)
+    for handler in getattr(stmt, "handlers", []):
+        out.append(handler.body)
+    return out

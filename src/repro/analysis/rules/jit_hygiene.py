@@ -1,0 +1,118 @@
+"""HL003: jax.jit hygiene.
+
+Definition-site checks on every registered jit entry (donate/static names
+must exist on the target function), and call-site checks: unhashable
+literals (list/dict/set) bound to static parameters, and write-back calls —
+a top-level argument that the same statement rebinds from the call's result
+without being donated, which silently doubles the buffer's memory and
+blocks XLA's in-place update.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis.hotlint import Finding, Project
+from repro.analysis.rules.donation import _key
+from repro.analysis.rules.host_sync import _header_exprs
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    findings.extend(_definition_checks(project))
+    for func in project.func_index.values():
+        for stmt in ast.walk(func.node):
+            if not isinstance(stmt, ast.stmt):
+                continue
+            targets = _stmt_targets(stmt)
+            for expr in _header_exprs(stmt):
+                for call in ast.walk(expr):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    rc = project.resolve_call(func, call)
+                    if rc.jit is None:
+                        continue
+                    findings.extend(
+                        _call_checks(func, rc.jit, call, targets))
+    findings = _dedup(findings)
+    return findings
+
+
+def _definition_checks(project: Project) -> List[Finding]:
+    out: List[Finding] = []
+    entries = list(project.module_jits.values())
+    for reg in project.registries.values():
+        entries.extend(reg.values())
+    for entry in entries:
+        if entry.target is None:
+            continue
+        params = set(entry.target.params())
+        mod = entry.target.module
+        for kind, names in (("donate", entry.donate), ("static",
+                                                       entry.static)):
+            bad = [n for n in names if n not in params]
+            if bad:
+                out.append(Finding(
+                    "HL003", mod.path, entry.line, entry.key,
+                    f"{kind}_argnames {bad} not parameters of "
+                    f"'{entry.target.name}'"))
+    return out
+
+
+def _call_checks(func, entry, call: ast.Call, targets: Set[str]):
+    out: List[Finding] = []
+    pos = entry.pos_params()
+
+    def param_of(i: int, kw) -> str:
+        if kw is not None:
+            return kw
+        return pos[i] if i < len(pos) else ""
+
+    bound = [(param_of(i, None), a) for i, a in enumerate(call.args)]
+    bound += [(k.arg, k.value) for k in call.keywords if k.arg]
+    for param, arg in bound:
+        if param in entry.static and isinstance(
+                arg, (ast.List, ast.Dict, ast.Set)):
+            out.append(Finding(
+                "HL003", func.module.path, arg.lineno, func.qualname,
+                f"unhashable {type(arg).__name__.lower()} literal bound to "
+                f"static parameter '{param}' of jit '{entry.key}' — every "
+                f"call re-traces"))
+        key = _key(arg)
+        if (key is not None and key in targets
+                and param not in entry.donate and param not in entry.static):
+            name = key.split(":", 1)[1]
+            out.append(Finding(
+                "HL003", func.module.path, call.lineno, func.qualname,
+                f"'{name}' is rebound from the result of jit "
+                f"'{entry.key}' but parameter '{param}' is not donated"))
+    return out
+
+
+def _stmt_targets(stmt: ast.stmt) -> Set[str]:
+    out: Set[str] = set()
+
+    def add(t) -> None:
+        key = _key(t)
+        if key is not None:
+            out.add(key)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                add(e)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            add(t)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        add(stmt.target)
+    return out
+
+
+def _dedup(findings: List[Finding]) -> List[Finding]:
+    seen, out = set(), []
+    for f in findings:
+        key = (f.rule, f.path, f.line, f.message)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out

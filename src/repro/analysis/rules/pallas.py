@@ -1,0 +1,296 @@
+"""HL004: pallas_call BlockSpec/grid consistency + the §12 prefix-DMA clamp.
+
+Structural checks on every ``pl.pallas_call`` site, resolved best-effort
+through local assignments and nested defs (unresolvable pieces are skipped,
+never guessed):
+
+* the kernel function's positional ref count must equal
+  ``num_scalar_prefetch + len(in_specs) + n_out + len(scratch_shapes)``
+  (minus anything bound by ``functools.partial``);
+* the operand call must pass ``num_scalar_prefetch + len(in_specs)`` arrays;
+* ``out_shape``/``out_specs`` list lengths must agree;
+* every index map's arity must be ``len(grid) + num_scalar_prefetch``;
+* §12 clamp: when an index map subscripts a scalar-prefetch operand (a
+  block table) with the *last* grid axis as the final index, the lookup
+  must either be clamped (``jnp.minimum``/``clip``) or the grid axis must
+  provably equal that operand's own extent (``grid[k]`` resolves to
+  ``<table>.shape[...]``).  Grids that run past the table (the ``mb + 1``
+  suffix-prefill pattern) DMA garbage block ids without this.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.hotlint import Finding, FuncInfo, ModuleInfo, Project
+
+
+def check(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for mod in project.modules.values():
+        for func in mod.functions.values():
+            findings.extend(_check_func(project, mod, func))
+    return findings
+
+
+def _check_func(project: Project, mod: ModuleInfo,
+                func: FuncInfo) -> List[Finding]:
+    out: List[Finding] = []
+    assigns: Dict[str, ast.expr] = {}
+    defs: Dict[str, ast.FunctionDef] = {}
+    for node in ast.walk(func.node):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    assigns[t.id] = node.value
+        elif isinstance(node, ast.FunctionDef) and node is not func.node:
+            defs[node.name] = node
+    for f in mod.functions.values():
+        if f.cls is None:
+            defs.setdefault(f.name, f.node)
+
+    def resolve(expr):
+        seen = 0
+        while isinstance(expr, ast.Name) and expr.id in assigns and seen < 8:
+            expr = assigns[expr.id]
+            seen += 1
+        return expr
+
+    for node in ast.walk(func.node):
+        if not (isinstance(node, ast.Call)
+                and _dotted_tail(node.func) == "pallas_call"):
+            continue
+        outer = _find_outer(func.node, node)
+        out.extend(_check_site(mod, func, node, outer, resolve, defs))
+    return out
+
+
+def _dotted_tail(expr) -> str:
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return ""
+
+
+def _find_outer(root, inner_call) -> Optional[ast.Call]:
+    for node in ast.walk(root):
+        if isinstance(node, ast.Call) and node.func is inner_call:
+            return node
+    return None
+
+
+def _root_name(expr) -> Optional[str]:
+    while isinstance(expr, (ast.Attribute, ast.Subscript, ast.Call)):
+        expr = expr.func if isinstance(expr, ast.Call) else expr.value
+    return expr.id if isinstance(expr, ast.Name) else None
+
+
+def _check_site(mod, func, inner: ast.Call, outer, resolve,
+                defs) -> List[Finding]:
+    out: List[Finding] = []
+
+    def add(line: int, message: str) -> None:
+        out.append(Finding("HL004", mod.path, line, func.qualname, message))
+
+    kw = {k.arg: k.value for k in inner.keywords if k.arg}
+    prefetch = 0
+    grid_e = kw.get("grid")
+    in_e, out_e, scratch_e = kw.get("in_specs"), kw.get("out_specs"), \
+        kw.get("scratch_shapes")
+    gs = resolve(kw["grid_spec"]) if "grid_spec" in kw else None
+    if isinstance(gs, ast.Call):
+        gskw = {k.arg: k.value for k in gs.keywords if k.arg}
+        pf = gskw.get("num_scalar_prefetch")
+        if isinstance(pf, ast.Constant):
+            prefetch = pf.value
+        grid_e = gskw.get("grid", grid_e)
+        in_e = gskw.get("in_specs", in_e)
+        out_e = gskw.get("out_specs", out_e)
+        scratch_e = gskw.get("scratch_shapes", scratch_e)
+
+    grid = resolve(grid_e) if grid_e is not None else None
+    grid_elts = list(grid.elts) if isinstance(grid, ast.Tuple) else None
+    n_grid = len(grid_elts) if grid_elts is not None else None
+
+    in_list = resolve(in_e) if in_e is not None else None
+    in_specs = list(in_list.elts) if isinstance(in_list, ast.List) else None
+    out_r = resolve(out_e) if out_e is not None else None
+    if isinstance(out_r, ast.List):
+        out_specs, n_out = list(out_r.elts), len(out_r.elts)
+    elif out_r is not None:
+        out_specs, n_out = [out_r], 1
+    else:
+        out_specs, n_out = [], None
+    scr = resolve(scratch_e) if scratch_e is not None else None
+    if isinstance(scr, ast.List):
+        n_scratch = len(scr.elts)
+    elif scratch_e is None:
+        n_scratch = 0
+    else:
+        n_scratch = None
+
+    # kernel positional-ref arity
+    if inner.args:
+        fn_expr, bound = inner.args[0], 0
+        partial_kws: List[str] = []
+        if (isinstance(fn_expr, ast.Call)
+                and _dotted_tail(fn_expr.func) == "partial" and fn_expr.args):
+            bound = len(fn_expr.args) - 1
+            partial_kws = [k.arg for k in fn_expr.keywords if k.arg]
+            fn_expr = fn_expr.args[0]
+        kdef = defs.get(fn_expr.id) if isinstance(fn_expr, ast.Name) else None
+        if kdef is not None and None not in (n_out, n_scratch) \
+                and in_specs is not None:
+            pos = [a.arg for a in kdef.args.posonlyargs + kdef.args.args]
+            have = len(pos) - bound - sum(p in pos for p in partial_kws)
+            want = prefetch + len(in_specs) + n_out + n_scratch
+            if have != want:
+                add(inner.lineno,
+                    f"kernel '{kdef.name}' takes {have} positional refs but "
+                    f"the call supplies {want} ({prefetch} prefetch + "
+                    f"{len(in_specs)} in + {n_out} out + {n_scratch} scratch)")
+
+    # operand count
+    if (outer is not None and in_specs is not None
+            and not any(isinstance(a, ast.Starred) for a in outer.args)):
+        want = prefetch + len(in_specs)
+        if len(outer.args) != want:
+            add(outer.lineno,
+                f"pallas_call invoked with {len(outer.args)} operands, "
+                f"specs declare {want} ({prefetch} prefetch + "
+                f"{len(in_specs)} in)")
+
+    # out_shape / out_specs agreement
+    osh = resolve(kw["out_shape"]) if "out_shape" in kw else None
+    if isinstance(osh, ast.List) and n_out is not None \
+            and len(osh.elts) != n_out:
+        add(inner.lineno,
+            f"out_shape lists {len(osh.elts)} results but out_specs "
+            f"declare {n_out}")
+
+    # index maps
+    for spec in (in_specs or []) + out_specs:
+        imap = _index_map(spec, resolve)
+        if imap is None:
+            continue
+        params, body_exprs, line = _map_signature(imap, defs)
+        if params is None:
+            continue
+        if n_grid is not None and len(params) != n_grid + prefetch:
+            add(line,
+                f"index map takes {len(params)} args, grid supplies "
+                f"{n_grid + prefetch} ({n_grid} grid + {prefetch} prefetch)")
+            continue
+        if prefetch:
+            _clamp_check(add, params, body_exprs, line, prefetch, grid_elts,
+                         resolve, defs, outer)
+    return out
+
+
+def _index_map(spec, resolve):
+    spec = resolve(spec)
+    if not (isinstance(spec, ast.Call)
+            and _dotted_tail(spec.func) == "BlockSpec"):
+        return None
+    for k in spec.keywords:
+        if k.arg == "index_map":
+            return k.value
+    if len(spec.args) >= 2:
+        return spec.args[1]
+    return None
+
+
+def _map_signature(imap, defs):
+    """(param names, body exprs, line) of a lambda or named-def index map."""
+    if isinstance(imap, ast.Name) and imap.id in defs:
+        imap = defs[imap.id]
+    if isinstance(imap, ast.Lambda):
+        return ([a.arg for a in imap.args.args], [imap.body], imap.lineno)
+    if isinstance(imap, ast.FunctionDef):
+        exprs = [s.value for s in ast.walk(imap)
+                 if isinstance(s, (ast.Return, ast.Assign, ast.Expr))
+                 and s.value is not None]
+        return ([a.arg for a in imap.args.args], exprs, imap.lineno)
+    return (None, None, 0)
+
+
+def _clamp_check(add, params, body_exprs, line, prefetch, grid_elts,
+                 resolve, defs, outer) -> None:
+    n_from_map = len(params) - prefetch
+    if n_from_map < 1:
+        return
+    grid_axis = {name: i for i, name in enumerate(params[:n_from_map])}
+    pf_index = {name: i for i, name in enumerate(params[n_from_map:])}
+    last_axis = n_from_map - 1
+
+    def operand_base(pf_idx: int) -> Optional[str]:
+        if outer is None or pf_idx >= len(outer.args):
+            return None
+        return _root_name(outer.args[pf_idx])
+
+    def grid_bound_is_table_extent(axis: int, pf_idx: int) -> bool:
+        if grid_elts is None or axis >= len(grid_elts):
+            return False
+        bound = resolve(grid_elts[axis])
+        if (isinstance(bound, ast.Subscript)
+                and isinstance(bound.value, ast.Attribute)
+                and bound.value.attr == "shape"):
+            base = _root_name(bound.value.value)
+            return base is not None and base == operand_base(pf_idx)
+        return False
+
+    def visit_subscripts(exprs, grid_axis, pf_index) -> None:
+        for expr in exprs:
+            for node in ast.walk(expr):
+                if (isinstance(node, ast.Subscript)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id in pf_index):
+                    _check_one(node, node.value.id, grid_axis, pf_index)
+                elif (isinstance(node, ast.Call)
+                      and isinstance(node.func, ast.Name)
+                      and node.func.id in defs):
+                    _visit_helper(node, grid_axis, pf_index)
+
+    def _visit_helper(call, grid_axis, pf_index) -> None:
+        helper = defs[call.func.id]
+        h_params = [a.arg for a in helper.args.args]
+        h_grid, h_pf = {}, {}
+        for p, a in zip(h_params, call.args):
+            if isinstance(a, ast.Name):
+                if a.id in grid_axis:
+                    h_grid[p] = grid_axis[a.id]
+                elif a.id in pf_index:
+                    h_pf[p] = pf_index[a.id]
+        exprs = [s.value for s in ast.walk(helper)
+                 if isinstance(s, (ast.Return, ast.Assign))
+                 and s.value is not None]
+        for expr in exprs:
+            for node in ast.walk(expr):
+                if (isinstance(node, ast.Subscript)
+                        and isinstance(node.value, ast.Name)
+                        and node.value.id in h_pf):
+                    _check_one(node, node.value.id, h_grid, h_pf)
+
+    def _check_one(sub, pf_name, grid_axis, pf_index) -> None:
+        sl = sub.slice
+        elems = list(sl.elts) if isinstance(sl, ast.Tuple) else [sl]
+        last = elems[-1]
+        if any(isinstance(n, ast.Call)
+               and _dotted_tail(n.func) in ("minimum", "min", "clip")
+               for n in ast.walk(last)):
+            return
+        names = {n.id for n in ast.walk(last) if isinstance(n, ast.Name)}
+        axes = {grid_axis[n] for n in names if n in grid_axis}
+        if last_axis not in axes:
+            return
+        if (isinstance(last, ast.Name)
+                and grid_bound_is_table_extent(grid_axis[last.id],
+                                               pf_index[pf_name])):
+            return
+        add(sub.lineno,
+            f"unclamped prefetch-table lookup '{pf_name}[..., <grid axis "
+            f"{last_axis}>]': clamp with jnp.minimum or bound the grid by "
+            f"the table's own extent (§12 prefix-DMA clamp)")
+
+    visit_subscripts(body_exprs, grid_axis, pf_index)

@@ -1,0 +1,262 @@
+"""Runtime serve-sanitizer (DESIGN.md §13): opt-in invariant enforcement.
+
+Enabled with ``REPRO_SANITIZE=1``.  Three facilities, all zero-cost when
+disabled and import-light (stdlib only — this module must stay importable
+from ``paged_cache`` without dragging jax in):
+
+* a :class:`ShadowAllocator` mirroring ``BlockAllocator`` bookkeeping with
+  *holder identity* (which seq / the radix cache owns each reference), so
+  double-frees, re-allocation of held blocks, and writes into blocks shared
+  with the prefix cache raise with a provenance trace instead of silently
+  corrupting KV;
+* drain-time accounting checks (:func:`check_allocator`,
+  :func:`check_engine_drained`) that work even with the sanitizer off —
+  they audit the allocator's own refcounts against the block tables and the
+  radix cache's retained set;
+* a host-sync ledger: every intentional readback in the engine calls
+  :func:`count_sync`, which records its call site so tests can cross-check
+  the *runtime* sync sites against the *static* ``# hotlint: sync(...)``
+  suppression sites.
+
+>>> s = ShadowAllocator()
+>>> s.on_allocate(0, [3])
+>>> s.on_retain([3], CACHE_HOLDER)
+>>> s.on_release([3], 0)
+>>> s.holders
+{3: ['cache']}
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, List, Set, Tuple
+
+#: holder tag the radix prefix cache uses for its retained references
+CACHE_HOLDER = "cache"
+
+
+def sanitize_enabled() -> bool:
+    """True when the process runs with ``REPRO_SANITIZE=1`` (or any non-0)."""
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def hot_path(fn):
+    """Marker for hotlint: ``fn`` must stay free of implicit host syncs.
+
+    Pure annotation — returns ``fn`` unchanged.  The static analyzer treats
+    decorated functions (and everything they call) as hot regions.
+    """
+    return fn
+
+
+class SanitizerError(AssertionError):
+    """Base class: an engine invariant was violated at runtime."""
+
+
+class BlockLeakError(SanitizerError):
+    """A KV block reference was leaked (refcounts don't balance at drain)."""
+
+
+class DoubleFreeError(SanitizerError):
+    """A KV block was released more times than it was retained."""
+
+
+class SharedWriteError(SanitizerError):
+    """A sequence wrote into a block another holder still references."""
+
+
+class SyncLedgerError(SanitizerError):
+    """Observed host syncs disagree with the static suppression sites."""
+
+
+# ---------------------------------------------------------------------------
+# host-sync ledger
+# ---------------------------------------------------------------------------
+
+_SYNC_LEDGER: Dict[Tuple[str, str], int] = {}
+
+
+def count_sync(n: int = 1) -> int:
+    """Record one intentional host sync and return its count contribution.
+
+    Engine code increments its counter via ``self.host_syncs +=
+    count_sync()`` so the increment is both statically auditable (hotlint
+    requires it next to every suppression) and dynamically ledgered: under
+    ``REPRO_SANITIZE=1`` the (file, function) call site is tallied.
+    """
+    if sanitize_enabled():
+        frame = sys._getframe(1)
+        site = (os.path.basename(frame.f_code.co_filename),
+                frame.f_code.co_name)
+        _SYNC_LEDGER[site] = _SYNC_LEDGER.get(site, 0) + 1
+    return n
+
+
+def sync_ledger() -> Dict[Tuple[str, str], int]:
+    """Snapshot of observed sync sites → counts (empty unless sanitizing)."""
+    return dict(_SYNC_LEDGER)
+
+
+def reset_sync_ledger() -> None:
+    _SYNC_LEDGER.clear()
+
+
+def check_sync_ledger(static_sites) -> None:
+    """Every observed sync site must be a statically suppressed one."""
+    stray = sorted(set(_SYNC_LEDGER) - set(static_sites))
+    if stray:
+        raise SyncLedgerError(
+            f"host syncs observed at sites with no static suppression: "
+            f"{stray}")
+
+
+# ---------------------------------------------------------------------------
+# shadow allocator
+# ---------------------------------------------------------------------------
+
+class ShadowAllocator:
+    """Holder-identity mirror of ``BlockAllocator``.
+
+    The real allocator keeps bare refcounts; the shadow keeps *who* holds
+    each reference (a seq id, ``CACHE_HOLDER``, or ``None`` for legacy
+    holder-less retains) plus a short per-block event trace, so violations
+    raise with provenance.  Hooks run after the real allocator mutates, so
+    the allocator's own ``ValueError`` paths keep their exception types.
+    """
+
+    def __init__(self) -> None:
+        self.holders: Dict[int, List[object]] = {}
+        self.materialized: Set[object] = set()
+        self.trace: Dict[int, List[str]] = {}
+
+    def _log(self, block: int, event: str) -> None:
+        log = self.trace.setdefault(block, [])
+        log.append(event)
+        del log[:-8]
+
+    def on_allocate(self, seq, blocks) -> None:
+        for b in blocks:
+            if self.holders.get(b):
+                raise DoubleFreeError(
+                    f"block {b} allocated to seq {seq} while still held by "
+                    f"{self.holders[b]}; trace={self.trace.get(b)}")
+            self.holders[b] = [seq]
+            self._log(b, f"alloc->{seq}")
+
+    def on_retain(self, blocks, holder) -> None:
+        for b in blocks:
+            self.holders.setdefault(b, []).append(holder)
+            self._log(b, f"retain->{holder}")
+
+    def on_release(self, blocks, holder) -> None:
+        for b in blocks:
+            held = self.holders.get(b)
+            if not held:
+                raise DoubleFreeError(
+                    f"release of unheld block {b} by {holder}; "
+                    f"trace={self.trace.get(b)}")
+            if holder in held:
+                held.remove(holder)
+            elif None in held:       # legacy holder-less retain
+                held.remove(None)
+            else:
+                held.pop()
+            self._log(b, f"release<-{holder}")
+            if not held:
+                del self.holders[b]
+
+    def on_free_seq(self, seq) -> None:
+        self.materialized.discard(seq)
+
+    def mark_materialized(self, seq) -> None:
+        """``seq``'s KV pages now hold real data other seqs may share."""
+        self.materialized.add(seq)
+
+    def check_write(self, writer, blocks) -> None:
+        """``writer`` is about to write KV into ``blocks``.
+
+        A write is a violation when another holder of the block is the
+        prefix cache or an already-materialized sequence — their KV would
+        be silently clobbered.  Not-yet-materialized holders are fine:
+        §12's publish-then-admit shares a publisher's blocks with same-wave
+        sharers *before* the wave dispatches.
+        """
+        for b in blocks:
+            others = list(self.holders.get(b, ()))
+            if writer in others:
+                others.remove(writer)
+            for h in others:
+                if h == CACHE_HOLDER or h in self.materialized:
+                    raise SharedWriteError(
+                        f"seq {writer} writing block {b} still held by "
+                        f"{h!r} (all holders {self.holders.get(b)}); "
+                        f"trace={self.trace.get(b)}")
+
+
+def maybe_shadow(alloc) -> "ShadowAllocator | None":
+    """Shadow for a new ``BlockAllocator``, or ``None`` when not sanitizing."""
+    return ShadowAllocator() if sanitize_enabled() else None
+
+
+# ---------------------------------------------------------------------------
+# drain-time accounting (always available, sanitizer on or off)
+# ---------------------------------------------------------------------------
+
+def check_allocator(alloc, cache=None) -> None:
+    """Audit a ``BlockAllocator``'s books.
+
+    Checks block conservation (free + live == pool), free-list uniqueness,
+    and that every live refcount is explained by exactly the block-table
+    occurrences plus the radix cache's retained blocks.  With the sanitizer
+    on, also cross-checks the shadow's holder counts.
+    """
+    free = list(alloc.free_blocks())
+    if len(set(free)) != len(free):
+        raise DoubleFreeError(f"free list contains duplicates: {free}")
+    live = dict(alloc.refcount)
+    both = set(free) & set(live)
+    if both:
+        raise BlockLeakError(
+            f"blocks {sorted(both)} are simultaneously free and refcounted")
+    if alloc.num_blocks != len(free) + len(live):
+        raise BlockLeakError(
+            f"block conservation violated: pool={alloc.num_blocks} != "
+            f"{len(free)} free + {len(live)} live")
+    expected: Dict[int, int] = {}
+    for table in alloc.tables.values():
+        for b in table:
+            expected[b] = expected.get(b, 0) + 1
+    if cache is not None:
+        for b in cache.retained_blocks():
+            expected[b] = expected.get(b, 0) + 1
+    if expected != live:
+        bad = {b: (expected.get(b, 0), live.get(b, 0))
+               for b in set(expected) | set(live)
+               if expected.get(b, 0) != live.get(b, 0)}
+        raise BlockLeakError(
+            f"refcount imbalance {{block: (expected, actual)}}: {bad} — "
+            f"a reference was retained without an owner or released twice")
+    shadow = getattr(alloc, "_shadow", None)
+    if shadow is not None:
+        counts = {b: len(h) for b, h in shadow.holders.items() if h}
+        if counts != live:
+            raise BlockLeakError(
+                f"shadow holder counts disagree with refcounts: "
+                f"{counts} != {live}")
+
+
+def check_engine_drained(engine) -> None:
+    """After the queue drains: every non-pinned block is back on the free
+    list, no seq table survives, and the allocator's books balance (cache-
+    retained blocks are legitimate survivors)."""
+    active = [i for i, a in enumerate(engine.active) if a is not None]
+    if active:
+        raise BlockLeakError(
+            f"drain check ran with slots still active: {active}")
+    null_seq = engine._NULL_SEQ
+    stray = sorted(s for s, t in engine.allocator.tables.items()
+                   if s != null_seq and t)
+    if stray:
+        raise BlockLeakError(
+            f"drained engine still owns block tables for seqs {stray}")
+    check_allocator(engine.allocator, getattr(engine, "prefix_cache", None))

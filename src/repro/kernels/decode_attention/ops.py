@@ -5,6 +5,7 @@ import functools
 
 import jax
 
+from repro.analysis.sanitizer import hot_path
 from repro.kernels.decode_attention.kernel import (
     decode_attention_int8_kernel, decode_attention_kernel,
     paged_decode_attention_kernel, paged_prefix_prefill_attention_kernel)
@@ -14,6 +15,7 @@ from repro.kernels.decode_attention.ref import (
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "use_ref"))
+@hot_path
 def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
                      use_ref: bool = False):
     if use_ref:
@@ -41,6 +43,7 @@ def paged_decode_attention_impl(q, k_pages, v_pages, block_tables, lengths,
 
 
 @functools.partial(jax.jit, static_argnames=("use_ref",))
+@hot_path
 def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
                            use_ref: bool = False):
     """Block-table paged decode attention (shared page pool; per-request
@@ -75,6 +78,7 @@ def paged_prefix_prefill_attention_impl(q, k_suf, v_suf, k_pages, v_pages,
 
 
 @functools.partial(jax.jit, static_argnames=("use_ref",))
+@hot_path
 def paged_prefix_prefill_attention(q, k_suf, v_suf, k_pages, v_pages,
                                    block_tables, prefix_lens, suffix_lens,
                                    *, use_ref: bool = False):
@@ -87,6 +91,7 @@ def paged_prefix_prefill_attention(q, k_suf, v_suf, k_pages, v_pages,
 
 
 @functools.partial(jax.jit, static_argnames=("block_k",))
+@hot_path
 def decode_attention_int8(q, k_cache, v_cache, k_scale, v_scale, lengths, *,
                           block_k: int = 512):
     """int8-KV-cache decode attention (in-VMEM dequant; §Perf cache_int8)."""

@@ -6,12 +6,14 @@ from typing import Optional
 
 import jax
 
+from repro.analysis.sanitizer import hot_path
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "use_ref"))
+@hot_path
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None, block_q: int = 128,
                     block_k: int = 128, use_ref: bool = False):

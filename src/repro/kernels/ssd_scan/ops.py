@@ -5,11 +5,13 @@ import functools
 
 import jax
 
+from repro.analysis.sanitizer import hot_path
 from repro.kernels.ssd_scan.kernel import ssd_scan_kernel
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "use_ref"))
+@hot_path
 def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, use_ref: bool = False):
     if use_ref:
         return ssd_scan_ref(x, dt, a, b, c)

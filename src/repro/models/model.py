@@ -12,6 +12,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitizer import hot_path
 from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
 from repro.models import encdec, transformer
 
@@ -45,6 +46,7 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Any], *, rules=None,
                                act_dtype=act_dtype)
 
 
+@hot_path
 def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *, rules=None,
             act_dtype=jnp.bfloat16, cache_len: Optional[int] = None):
     if _is_encdec(cfg):
@@ -56,6 +58,7 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], *, rules=None,
                                act_dtype=act_dtype, cache_len=cache_len)
 
 
+@hot_path
 def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, Any], *,
                 rules=None, act_dtype=jnp.bfloat16):
     mod = encdec if _is_encdec(cfg) else transformer
@@ -64,6 +67,7 @@ def decode_step(params, cfg: ModelConfig, cache, batch: Dict[str, Any], *,
                            act_dtype=act_dtype)
 
 
+@hot_path
 def decode_multi(params, cfg: ModelConfig, cache, batch: Dict[str, Any], *,
                  num_steps: int, rules=None, act_dtype=jnp.bfloat16):
     """Fused ``num_steps``-step greedy decode against a dense cache.
@@ -101,6 +105,7 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_tokens: int,
     return transformer.init_paged_cache(cfg, num_blocks, block_tokens, dtype)
 
 
+@hot_path
 def prefill_suffix(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
                    *, rules=None, act_dtype=jnp.bfloat16):
     """Suffix-only prefill against cached prefix pages (paged families
@@ -140,6 +145,7 @@ def prefill_wave(params, cfg: ModelConfig, pages, state,
         rules=rules, act_dtype=act_dtype)
 
 
+@hot_path
 def decode_step_paged(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
                       *, rules=None, act_dtype=jnp.bfloat16):
     """batch: {"tokens": [B], "positions": [B], "block_tables": [B, M]}."""
@@ -148,6 +154,7 @@ def decode_step_paged(params, cfg: ModelConfig, pages, batch: Dict[str, Any],
         batch["block_tables"], rules=rules, act_dtype=act_dtype)
 
 
+@hot_path
 def decode_multi_paged(params, cfg: ModelConfig, pages,
                        batch: Dict[str, Any], *, num_steps: int, rules=None,
                        act_dtype=jnp.bfloat16):
@@ -178,6 +185,7 @@ def write_suffix_pages_batched(pages, kv, block_tables, starts, lengths, *,
         pages, kv, block_tables, starts, lengths, null_block=null_block)
 
 
+@hot_path
 def copy_pages(pages, src, dst):
     """Copy-on-write block clone: pages[:, dst[i]] = pages[:, src[i]]."""
     return transformer.copy_pages(pages, src, dst)

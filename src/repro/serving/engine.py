@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizer as _san
+from repro.analysis.sanitizer import count_sync, hot_path
 from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
 from repro.core.wma import batch_wma
@@ -93,17 +95,23 @@ def _jitted(cfg: ModelConfig, dtype):
         "prefill": jax.jit(
             functools.partial(M.prefill, cfg=cfg, act_dtype=dtype),
             static_argnames=("cache_len",)),
+        # every decode entry point donates its KV buffer: each step writes
+        # one token's KV back into the same cache/pool, so without donation
+        # XLA keeps two full copies live across the dispatch (and hotlint
+        # HL003 flags the rebind-without-donate call sites)
         "decode": jax.jit(
-            functools.partial(M.decode_step, cfg=cfg, act_dtype=dtype)),
+            functools.partial(M.decode_step, cfg=cfg, act_dtype=dtype),
+            donate_argnames=("cache",)),
         "decode_multi": jax.jit(
             functools.partial(M.decode_multi, cfg=cfg, act_dtype=dtype),
-            static_argnames=("num_steps",)),
+            static_argnames=("num_steps",), donate_argnames=("cache",)),
         "decode_paged": jax.jit(
-            functools.partial(M.decode_step_paged, cfg=cfg, act_dtype=dtype)),
+            functools.partial(M.decode_step_paged, cfg=cfg, act_dtype=dtype),
+            donate_argnames=("pages",)),
         "decode_multi_paged": jax.jit(
             functools.partial(M.decode_multi_paged, cfg=cfg,
                               act_dtype=dtype),
-            static_argnames=("num_steps",)),
+            static_argnames=("num_steps",), donate_argnames=("pages",)),
         "prefill_wave": jax.jit(
             functools.partial(M.prefill_wave, cfg=cfg, act_dtype=dtype),
             donate_argnames=("pages", "state")),
@@ -151,6 +159,7 @@ class BatchEngine:
             out[i, :len(ids)] = ids
         return out
 
+    @hot_path
     def serve_batch(self, batch: Batch) -> ServeResult:
         reqs = batch.requests
         t0 = time.perf_counter()
@@ -177,6 +186,7 @@ class BatchEngine:
         # into power-of-two on-device windows; the padded-vocab logits are
         # sliced exactly once, inside the fused argmax. Decode until the
         # slowest request finishes (request waiting!).
+        # hotlint: sync(uncounted: decode_time barrier, not a readback)
         jax.block_until_ready(logits)   # decode_time excludes the prefill
         t_dec = time.perf_counter()
         chunks: List[np.ndarray] = []
@@ -187,8 +197,9 @@ class BatchEngine:
                 self.params, cache=cache,
                 batch={"logits": logits, "positions": positions},
                 num_steps=k)
-            chunks.append(np.asarray(toks))   # one host sync per window
-            self.host_syncs += 1
+            # hotlint: sync(window token readback — one sync per window)
+            chunks.append(np.asarray(toks))
+            self.host_syncs += count_sync()
             remaining -= k
         toks = (np.concatenate(chunks, axis=1) if chunks
                 else np.zeros((len(reqs), 0), np.int32))
@@ -231,6 +242,10 @@ class ContinuousEngine:
         self.positions = np.zeros(slots, np.int32)
         self.host_syncs = 0
 
+    # device-resident attrs: hotlint taints reads of these in hot regions
+    # (positions is a HOST mirror here, deliberately absent)
+    _DEVICE_STATE = ("cache", "logits")
+
     def _merge_cache_slot(self, slot: int, single_cache) -> None:
         """Copy a single-request prefill cache into slot ``slot``."""
         def merge(dst, src):
@@ -245,6 +260,7 @@ class ContinuousEngine:
     def has_capacity(self) -> bool:
         return None in self.active
 
+    @hot_path
     def join(self, req: Request) -> int:
         if not self.has_capacity:
             raise EngineFull(
@@ -274,6 +290,7 @@ class ContinuousEngine:
                              "target": min(req.gen_length, self.max_gen)}
         return slot
 
+    @hot_path
     def step(self) -> List[Request]:
         """One decode iteration over all active slots; returns finished."""
         if not any(self.active):
@@ -288,8 +305,9 @@ class ContinuousEngine:
         self.positions = self.positions + 1
         # read the tokens back only after the decode dispatch is in
         # flight: the sync overlaps device compute instead of serializing
+        # hotlint: sync(per-step token readback, overlapped with decode)
         tok_host = np.asarray(next_tok)
-        self.host_syncs += 1
+        self.host_syncs += count_sync()
         for slot, a in enumerate(self.active):
             if a is not None:
                 a["generated"].append(int(tok_host[slot]))
@@ -439,6 +457,11 @@ class PagedContinuousEngine:
 
     _NULL_SEQ = NULL_SEQ   # allocator seq_id owning the null block
                            # (shared constant: serving.paged_cache.NULL_SEQ)
+
+    # device-resident attrs: hotlint taints reads of these in hot regions
+    # (pos_host and the allocator tables are HOST mirrors, deliberately
+    # absent — reading them costs nothing)
+    _DEVICE_STATE = ("pages", "tables", "positions", "active_mask", "logits")
 
     # -- admission -----------------------------------------------------------
 
@@ -719,6 +742,15 @@ class PagedContinuousEngine:
         pos_vals[n:] = pos_vals[0]
         attn = (rows[:, :width] if width > 1
                 else np.full((nb, 1), self.null_block, np.int32))
+        shadow = getattr(self.allocator, "_shadow", None)
+        if shadow is not None:
+            # every block this wave's KV scatter writes into (suffix +
+            # predicted-generation tail) must be privately owned: the
+            # shared head stops at cached // bt, and a matched partial
+            # tail was COW-cloned by _reserve
+            for p in plans:
+                shadow.check_write(p["slot"],
+                                   p["table"][p["cached"] // self.bt:])
         state = {"tables": self.tables, "positions": self.positions,
                  "active": self.active_mask, "logits": self.logits}
         # np arrays go to the jitted call as-is: jit batches the
@@ -738,6 +770,10 @@ class PagedContinuousEngine:
         self.prefill_dispatches += 1
         for p in plans:
             self.pos_host[p["slot"]] = len(p["ids"])
+            if shadow is not None:
+                # the dispatch above wrote this slot's KV: from here on a
+                # same-wave sharer writing into its pages is a violation
+                shadow.mark_materialized(p["slot"])
 
     def _prefill_admitted(self, admitted: List[Dict[str, object]]) -> None:
         """Order the wave radix-aware and dispatch it with the minimum
@@ -765,6 +801,7 @@ class PagedContinuousEngine:
             for sb in sorted(buckets):
                 self._dispatch_wave(buckets[sb])
 
+    @hot_path
     def join(self, req: Request) -> int:
         self._flush_publishes()
         self._wave_pending = []
@@ -772,6 +809,7 @@ class PagedContinuousEngine:
         self._prefill_admitted([plan])
         return int(plan["slot"])
 
+    @hot_path
     def join_many(self, reqs: Iterable[Request]) -> int:
         """Admit the longest admissible prefix of ``reqs`` as ONE
         admission wave: radix-aware ordering (same-wave chain sharers
@@ -949,6 +987,15 @@ class PagedContinuousEngine:
             # hand them to the caller on the exception for requeue
             e.evicted = evicted
             raise
+        shadow = getattr(self.allocator, "_shadow", None)
+        if shadow is not None:
+            # the window appends from each slot's write cursor: every
+            # block at or past it must be privately owned (post-_grow COW)
+            for slot, a in enumerate(self.active):
+                if a is not None:
+                    t = self.allocator.tables[slot]
+                    shadow.check_write(
+                        slot, t[int(self.pos_host[slot]) // self.bt:])
         k = self._window_steps()
         if max_steps is not None:
             k = max(1, min(k, max_steps))
@@ -970,8 +1017,9 @@ class PagedContinuousEngine:
                    "block_tables": self.tables,
                    "active": self.active_mask},
             num_steps=k)
-        toks = np.asarray(toks)          # the one host sync per window
-        self.host_syncs += 1
+        # hotlint: sync(the one window token readback — §9 fused decode)
+        toks = np.asarray(toks)
+        self.host_syncs += count_sync()
         self.decode_steps += k
         finished = []
         for slot, a in enumerate(self.active):
@@ -1081,9 +1129,10 @@ class PagedContinuousEngine:
                 self.pages = self._copy_pages(self.pages, nulls, nulls)
                 k <<= 1
         for k in windows:
-            # results discarded: a discarded window only writes junk into
-            # the null block of a *copy* of the pools
-            self._decode_multi(
+            # pages are donated-and-reassigned (dropping them would delete
+            # the live pool); logits/positions/tokens are discarded — an
+            # idle-mask window only writes junk into the null block
+            _, self.pages, _, _ = self._decode_multi(
                 self.params, pages=self.pages,
                 batch={"logits": self.logits, "positions": self.positions,
                        "block_tables": self.tables,
@@ -1096,6 +1145,15 @@ class PagedContinuousEngine:
         live = int(sum(int(self.pos_host[s])
                        for s, a in enumerate(self.active) if a is not None))
         return self.allocator.utilization(live)
+
+    def assert_drained(self) -> None:
+        """Teardown invariant (DESIGN.md §13): with every request finished
+        or evicted, the only live allocation is the null block and every
+        refcount is exactly explained by the tables + the radix cache's
+        retained references.  Raises ``BlockLeakError`` otherwise.  Works
+        with the sanitizer off — the check reads only the real allocator."""
+        self._flush_publishes()
+        _san.check_engine_drained(self)
 
 
 def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,

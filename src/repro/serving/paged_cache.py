@@ -29,6 +29,7 @@ import dataclasses
 import heapq
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+from repro.analysis import sanitizer as _san
 from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
 from repro.core.wma import MemoryModel
@@ -76,6 +77,13 @@ class BlockAllocator:
         self.free: List[int] = list(range(num_blocks))
         self.tables: Dict[int, List[int]] = {}      # seq_id -> block ids
         self.refcount: Dict[int, int] = {}          # block id -> references
+        # holder-identity mirror, None unless REPRO_SANITIZE=1; hooks run
+        # AFTER the real mutation so ValueError paths keep their types
+        self._shadow = _san.maybe_shadow(self)
+
+    def free_blocks(self) -> List[int]:
+        """The free list (sanitizer/drain-check accessor)."""
+        return self.free
 
     def blocks_needed(self, tokens: int) -> int:
         """Blocks covering ``tokens`` tokens (ceil division)."""
@@ -103,10 +111,14 @@ class BlockAllocator:
         if need > len(self.free):
             raise MemoryError(
                 f"paged OOM: need {need} blocks, {len(self.free)} free")
+        fresh: List[int] = []
         for _ in range(max(need, 0)):
             b = self.free.pop()
             self.refcount[b] = 1
             table.append(b)
+            fresh.append(b)
+        if self._shadow is not None and fresh:
+            self._shadow.on_allocate(seq_id, fresh)
         return table
 
     def share(self, seq_id: int, blocks: Sequence[int]) -> List[int]:
@@ -118,19 +130,23 @@ class BlockAllocator:
         if self.tables.get(seq_id):
             raise ValueError(f"seq {seq_id} already has a table; shared "
                              f"prefix blocks must be its first entries")
-        self.retain(blocks)
+        self.retain(blocks, holder=seq_id)
         table = self.tables.setdefault(seq_id, [])
         table.extend(blocks)
         return table
 
-    def retain(self, blocks: Sequence[int]) -> None:
-        """Add one reference to each of ``blocks`` (all must be live)."""
+    def retain(self, blocks: Sequence[int], holder=None) -> None:
+        """Add one reference to each of ``blocks`` (all must be live).
+        ``holder`` tags the reference's owner for the sanitizer's shadow
+        bookkeeping (a seq id, the cache, or None)."""
         for b in blocks:
             if self.refcount.get(b, 0) <= 0:
                 raise ValueError(f"block {b} is free; cannot retain")
             self.refcount[b] += 1
+        if self._shadow is not None:
+            self._shadow.on_retain(blocks, holder)
 
-    def release(self, blocks: Sequence[int]) -> None:
+    def release(self, blocks: Sequence[int], holder=None) -> None:
         """Drop one reference from each of ``blocks``; refcount 0 frees."""
         for b in blocks:
             n = self.refcount.get(b, 0)
@@ -141,6 +157,8 @@ class BlockAllocator:
                 self.free.append(b)
             else:
                 self.refcount[b] = n - 1
+        if self._shadow is not None:
+            self._shadow.on_release(blocks, holder)
 
     def cow_if_not_appendable(self, seq_id: int,
                               idx: int) -> Optional[Tuple[int, int]]:
@@ -168,12 +186,18 @@ class BlockAllocator:
         self.refcount[dst] = 1
         self.refcount[src] = n - 1
         table[idx] = dst
+        if self._shadow is not None:
+            # the seq's one reference moves src -> dst
+            self._shadow.on_release([src], seq_id)
+            self._shadow.on_allocate(seq_id, [dst])
         return (src, dst)
 
     def free_seq(self, seq_id: int) -> None:
         """Drop the sequence's table, releasing one reference per entry
         (shared pages survive as long as any other holder remains)."""
-        self.release(self.tables.pop(seq_id, []))
+        self.release(self.tables.pop(seq_id, []), holder=seq_id)
+        if self._shadow is not None:
+            self._shadow.on_free_seq(seq_id)
 
     @property
     def used_blocks(self) -> int:
@@ -375,7 +399,7 @@ class RadixPrefixCache:
             child = node.children.get(tup)
             if child is None:
                 block = table[pos // bt]
-                self.allocator.retain([block])
+                self.allocator.retain([block], holder=_san.CACHE_HOLDER)
                 child = RadixNode(tup, block, node)
                 node.children[tup] = child
                 created += 1
@@ -385,7 +409,7 @@ class RadixPrefixCache:
             tup = tuple(token_ids[pos:n])
             if tup not in node.partials:
                 block = table[pos // bt]
-                self.allocator.retain([block])
+                self.allocator.retain([block], holder=_san.CACHE_HOLDER)
                 node.partials[tup] = RadixNode(tup, block, node)
                 created += 1
         if created:
@@ -425,6 +449,11 @@ class RadixPrefixCache:
     def num_nodes(self) -> int:
         return sum(1 for _ in self.nodes())
 
+    def retained_blocks(self) -> List[int]:
+        """One entry per allocator reference the cache holds (a node owns
+        exactly one) — the drain check's 'legitimate survivor' set."""
+        return [n.block for n in self.nodes()]
+
     def reclaimable_blocks(self, keep: Optional[RadixNode] = None) -> int:
         """Blocks leaf-LRU eviction would actually *free*: blocks of
         unpinned evictable nodes (whole subtree evictable, ``keep``'s
@@ -460,7 +489,7 @@ class RadixPrefixCache:
             del parent.children[key]
         else:
             del parent.partials[key]
-        self.allocator.release([victim.block])
+        self.allocator.release([victim.block], holder=_san.CACHE_HOLDER)
         self.evicted += 1
 
     def evict_until(self, free_blocks: int) -> bool:

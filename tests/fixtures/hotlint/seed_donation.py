@@ -1,0 +1,19 @@
+"""Seeded violation: reading a donated buffer after the jit call.
+
+Parsed by hotlint in tests — never imported.  ``decode`` donates
+``pages``; ``drive`` passes ``pages`` in and then reads
+``pages["k"]`` afterwards, so HL002 must fire.
+"""
+import jax
+
+
+def _decode(pages, tok):
+    return pages["k"] * tok, tok + 1
+
+
+decode = jax.jit(_decode, donate_argnames=("pages",))
+
+
+def drive(pages, tok):
+    out, tok2 = decode(pages, tok)
+    return pages["k"].sum() + out.sum()

@@ -1,0 +1,20 @@
+"""Seeded violation: a suppressed sync with no host_syncs increment.
+
+Parsed by hotlint in tests — never imported.  The readback carries a
+counted ``# hotlint: sync(...)`` suppression (so HL001 stays quiet) but
+no ``host_syncs`` increment follows within the audit window — HL005
+must fire.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.sanitizer import hot_path
+
+
+@hot_path
+def step_loop(state, logits):
+    tok = jnp.argmax(logits, axis=-1)
+    # hotlint: sync(window readback)
+    out = np.asarray(tok)
+    state["tokens"].append(out)
+    return state

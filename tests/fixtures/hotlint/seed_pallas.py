@@ -1,0 +1,32 @@
+"""Seeded violation: unclamped prefix-DMA lookup on the last grid axis.
+
+Parsed by hotlint in tests — never imported.  The in_spec index map
+reads ``tables[bi, ji]`` where ``ji`` ranges over ``num_blocks`` — a
+runtime parameter hotlint cannot tie to ``tables.shape[1]`` — without a
+``jnp.minimum``-style clamp, so HL004 must fire (the DESIGN.md §12
+variable-prefix rule: a row's table may be shorter than the grid).
+"""
+import jax
+from jax.experimental import pallas as pl
+
+
+def _kernel(tables_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def gather(tables, x, num_blocks: int):
+    grid_spec = pl.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(tables.shape[0], num_blocks),
+        in_specs=[
+            pl.BlockSpec((None, 1, x.shape[-1]),
+                         lambda bi, ji, tables: (tables[bi, ji], 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, x.shape[-1]),
+                               lambda bi, ji, tables: (bi, ji)),
+    )
+    return pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(
+            (tables.shape[0], tables.shape[1], x.shape[-1]), x.dtype),
+    )(tables, x)

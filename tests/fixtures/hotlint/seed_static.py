@@ -1,0 +1,18 @@
+"""Seeded violation: unhashable literal passed to a static jit arg.
+
+Parsed by hotlint in tests — never imported.  ``factors`` is declared
+static but the call site passes a list literal, which would raise at
+trace time — HL003 must fire.
+"""
+import jax
+
+
+def _scale(x, factors):
+    return x * factors[0]
+
+
+scale = jax.jit(_scale, static_argnames=("factors",))
+
+
+def run(x):
+    return scale(x, [2.0, 3.0])

@@ -1,0 +1,15 @@
+"""Seeded violation: an unsuppressed int() readback in a hot loop.
+
+Parsed by hotlint in tests — never imported.  The ``int(tok[0])`` call
+forces a device->host transfer inside a hot function with no
+``# hotlint: sync(...)`` suppression, so HL001 must fire.
+"""
+import jax.numpy as jnp
+
+from repro.analysis.sanitizer import hot_path
+
+
+@hot_path
+def step_loop(logits):
+    tok = jnp.argmax(logits, axis=-1)
+    return int(tok[0])

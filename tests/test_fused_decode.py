@@ -71,7 +71,8 @@ def test_decode_multi_paged_bitexact_vs_sequential(params):
     k = 6
     jt = _jitted(CFG, jnp.float32)
     pages, tables, positions, logits = _paged_fixture(params)
-    lg, pg, pos = logits, pages, positions
+    lg, pos = logits, positions
+    pg = jax.tree.map(jnp.copy, pages)   # decode_paged donates its pages
     seq_toks = []
     for _ in range(k):
         tok = jnp.argmax(lg[:, :CFG.vocab_size], axis=-1).astype(jnp.int32)
@@ -126,7 +127,8 @@ def test_decode_multi_dense_bitexact_vs_sequential(params):
                        "lengths": jnp.asarray(lengths)},
         cache_len=64)
     pos = jnp.asarray(lengths)
-    lg, ch = logits, cache
+    lg = logits
+    ch = jax.tree.map(jnp.copy, cache)   # decode donates its cache
     seq_toks = []
     for _ in range(5):
         tok = jnp.argmax(lg[:, :CFG.vocab_size], axis=-1).astype(jnp.int32)

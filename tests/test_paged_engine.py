@@ -92,6 +92,7 @@ def test_paged_matches_dense_continuous_tokens(params):
     for r in reqs:
         assert pe.generated[r.req_id] == dense_gen[r.req_id], r.req_id
         assert len(pe.generated[r.req_id]) == min(r.gen_length, 16)
+    pe.assert_drained()   # every block back except the null block
 
 
 def test_paged_admits_strictly_more_at_equal_theta(params):
@@ -121,6 +122,7 @@ def test_paged_admits_strictly_more_at_equal_theta(params):
     done, paged_peak = _drain(paged, reqs)
     assert done == len(reqs)
     assert paged_peak > dense_peak, (paged_peak, dense_peak)
+    paged.assert_drained()
 
 
 def test_eviction_and_requeue_on_prediction_undershoot(params):
@@ -141,6 +143,7 @@ def test_eviction_and_requeue_on_prediction_undershoot(params):
         assert len(eng.generated[r.req_id]) == 12
     # pool fully reclaimed after the storm
     assert eng.allocator.used_blocks == 1    # just the null block
+    eng.assert_drained()
 
 
 def test_paged_pool_too_small_for_one_request_is_a_memory_error():

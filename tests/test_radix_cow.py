@@ -176,6 +176,7 @@ def test_three_templates_share_exactly_the_head_blocks(params):
     assert all(len(g) == 4 for g in eng.generated.values())
     # after all finish, only the cache's references remain
     assert all(eng.allocator.refcount[b] == 1 for b in head)
+    eng.assert_drained()   # cache-retained blocks are legitimate survivors
 
 
 def test_head_only_hits_match_streams_and_save_prefill(params):
@@ -195,6 +196,7 @@ def test_head_only_hits_match_streams_and_save_prefill(params):
         assert stats["served"] == len(reqs)
         out[pc] = [eng.generated[r.req_id] for r in reqs]
         toks[pc] = eng.prefill_tokens
+        eng.assert_drained()
         if pc:
             assert eng.prefix_cache.hits >= 2
     assert out[True] == out[False]

@@ -1,0 +1,169 @@
+"""Runtime serve-sanitizer acceptance tests (DESIGN.md §13):
+
+- shadow allocator: writes into cache-held or materialized-shared blocks
+  raise SharedWriteError with provenance; publish-then-admit sharing
+  (§12) stays legal
+- drain accounting: a leaked retain and a double release are caught by
+  check_allocator / the shadow, sanitizer on or off
+- jit donation is live on this backend: a donated buffer really is
+  deleted (the invariant HL002 enforces statically)
+- engine level: breaking copy-on-write makes the very next radix-hit
+  admission fail loudly instead of silently clobbering cached KV
+- the runtime host-sync ledger matches the static ``# hotlint: sync``
+  suppression sites and the engine's own counter exactly
+"""
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import hotlint
+from repro.analysis import sanitizer
+from repro.analysis.sanitizer import (BlockLeakError, DoubleFreeError,
+                                      SharedWriteError)
+from repro.configs import get_config
+from repro.core.types import Request
+from repro.serving.engine import PagedContinuousEngine, drive_paged
+from repro.serving.paged_cache import BlockAllocator
+from repro.workload.apps import make_dataset
+
+ROOT = Path(__file__).resolve().parent.parent
+CFG = get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def params():
+    from repro.models import model as M
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _reqs(n, max_gen=10, seed=0):
+    reqs = make_dataset(2, seed=seed)[:n]
+    for i, r in enumerate(reqs):
+        r.user_input = " ".join(r.user_input.split()[:6])
+        r.gen_length = 3 + (i * 3) % max_gen
+        r.predicted_gen_length = r.gen_length
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# shadow allocator units
+# ---------------------------------------------------------------------------
+
+def test_shadow_flags_write_into_cache_held_block(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    a = BlockAllocator(num_blocks=8, block_tokens=4)
+    t = a.allocate(0, 8)
+    a.retain([t[1]], holder=sanitizer.CACHE_HOLDER)
+    a._shadow.check_write(0, [t[0]])          # sole holder: fine
+    with pytest.raises(SharedWriteError):
+        a._shadow.check_write(0, [t[1]])      # cache still references it
+
+
+def test_shadow_permits_publish_then_admit_until_materialized(monkeypatch):
+    """§12: a publisher's blocks may be shared with same-wave sharers
+    before the wave writes KV — the write becomes illegal only once the
+    publisher's pages hold real data."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    a = BlockAllocator(num_blocks=8, block_tokens=4)
+    t = a.allocate(0, 4)
+    a.share(1, [t[0]])
+    a._shadow.check_write(1, [t[0]])          # pre-dispatch: legal
+    a._shadow.mark_materialized(0)
+    with pytest.raises(SharedWriteError):
+        a._shadow.check_write(1, [t[0]])      # would clobber live KV
+
+
+def test_shadow_flags_double_release(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    a = BlockAllocator(num_blocks=8, block_tokens=4)
+    t = a.allocate(0, 4)
+    a.free_seq(0)
+    with pytest.raises(DoubleFreeError):
+        a._shadow.on_release([t[0]], 0)
+
+
+def test_drain_accounting_catches_leaked_retain(monkeypatch):
+    """check_allocator works with the sanitizer OFF: a holder-less stray
+    retain survives free_seq and unbalances the books."""
+    monkeypatch.delenv("REPRO_SANITIZE", raising=False)
+    a = BlockAllocator(num_blocks=8, block_tokens=4)
+    t = a.allocate(0, 8)
+    sanitizer.check_allocator(a)              # balanced while live
+    a.retain([t[0]])                          # leaked reference
+    a.free_seq(0)
+    with pytest.raises(BlockLeakError):
+        sanitizer.check_allocator(a)
+
+
+# ---------------------------------------------------------------------------
+# donation is live (the runtime fact HL002 guards)
+# ---------------------------------------------------------------------------
+
+def test_donated_buffer_is_deleted():
+    def _step(c, x):
+        return c + x, x * 2
+
+    f = jax.jit(_step, donate_argnames=("c",))
+    c = jnp.arange(4.0)
+    out, _ = f(c, jnp.ones(4))
+    np.asarray(out)                           # materialize the result
+    with pytest.raises(RuntimeError):
+        np.asarray(c)                         # use-after-donation
+
+
+# ---------------------------------------------------------------------------
+# engine level: broken COW is caught at the next admission
+# ---------------------------------------------------------------------------
+
+_INSTR = "alpha beta gamma delta epsilon zeta eta theta"   # +BOS = 9 toks
+
+
+def _radix_req(i, user_input):
+    n_in = len(user_input.split())
+    return Request(app=f"app{i}", task=f"app{i}", instruction=_INSTR,
+                   user_input=user_input,
+                   length=len(_INSTR.split()) + 1 + n_in,
+                   user_input_length=n_in, gen_length=4,
+                   predicted_gen_length=4)
+
+
+def test_broken_cow_raises_shared_write_on_radix_hit(params, monkeypatch):
+    """Disable copy-on-write and admit a radix hit whose shared prefix
+    ends mid-block (9 tokens, block_tokens=4): the wave would append
+    suffix KV into the cache-held partial tail, and the shadow stops the
+    dispatch before the write."""
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    monkeypatch.setattr(BlockAllocator, "cow_if_not_appendable",
+                        lambda self, seq_id, idx: None)
+    eng = PagedContinuousEngine(CFG, params=params, max_concurrency=4,
+                                num_blocks=64, block_tokens=4,
+                                max_len=64, max_gen=8, prefix_cache=True)
+    eng.join(_radix_req(0, "foo bar baz"))    # publishes the 9-token head
+    with pytest.raises(SharedWriteError):
+        eng.join(_radix_req(1, "qux quux corge"))
+
+
+# ---------------------------------------------------------------------------
+# host-sync ledger vs static suppression sites
+# ---------------------------------------------------------------------------
+
+def test_sync_ledger_matches_static_sites_and_counter(params, monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE", "1")
+    sanitizer.reset_sync_ledger()
+    eng = PagedContinuousEngine(CFG, params=params, max_concurrency=4,
+                                num_blocks=48, block_tokens=8,
+                                max_len=128, max_gen=16)
+    reqs = _reqs(4, seed=2)
+    stats = drive_paged(eng, reqs)
+    assert stats["served"] == len(reqs)
+    ledger = sanitizer.sync_ledger()
+    static = hotlint.collect_sync_sites([str(ROOT / "src" / "repro")])
+    assert ledger, "sanitized run recorded no sync sites"
+    assert set(ledger) <= static, (set(ledger), static)
+    assert sum(ledger.values()) == eng.host_syncs
+    sanitizer.check_sync_ledger(static)       # the CI-facing assertion
+    eng.assert_drained()
