@@ -38,6 +38,16 @@
                     fewer tokens than exact-match ever could — writes a
                     ``radix_prefix`` section into ``BENCH_engine.json``
                     (schema v3)
+- chaos_storm     : the §14 degradation contract as a benchmark: replay
+                    one scripted fault storm (pool shrink, ×4 under-
+                    prediction skew, poisoned logits, a stalled window,
+                    pool restore) through the paged engine and record
+                    indicator metrics — no hang, no strand, every
+                    request served or typed-shed, surviving streams
+                    bit-exact vs the fault-free reference run.  Writes a
+                    ``chaos`` section into ``BENCH_engine.json``
+                    (schema v5); floors in scripts/check_bench.py pin
+                    the indicators at their contractual values
 """
 from __future__ import annotations
 
@@ -48,7 +58,7 @@ import numpy as np
 
 Row = Tuple[str, float, str]
 
-BENCH_ENGINE_SCHEMA_VERSION = 4
+BENCH_ENGINE_SCHEMA_VERSION = 5
 
 
 def sens_phi(rates=(12.0,), phis=(5e3, 5e4, 5e5, 5e12),
@@ -675,6 +685,124 @@ def radix_prefix_sweep(n_requests: int = 8, head_words: int = 60,
     rows.append(("radix_prefix/head_saved_vs_exact_match", 0.0,
                  f"saved={section['head_saved_vs_exact_match']:.1%}"))
     return rows
+
+
+def chaos_storm(n_requests: int = 6, max_gen: int = 12, max_len: int = 64,
+                block_tokens: int = 8,
+                out_path: str = "BENCH_engine.json",
+                arch: str = "smollm-135m") -> List[Row]:
+    """Degradation-contract storm (DESIGN.md §14): serve one workload
+    twice on the reduced config — fault-free reference, then under a
+    scripted :class:`FaultInjector` storm (pool shrink → ×4 under-
+    prediction skew → poisoned logits → stalled window → pool restore) —
+    and record the contract as exact-int indicators:
+
+    - ``hung = 0``: the driver finished inside its step budget with an
+      empty queue;
+    - ``accounted = 1``: every request was served or typed-shed;
+    - ``bitexact_survivors = 1``: every finished stream equals the
+      fault-free reference stream token-for-token (quarantined and
+      evicted requests restart from the prompt, so replay-scripted
+      generation must reconverge exactly);
+    - ``stranded_blocks = 0`` / ``drained = 1``: after the plan's
+      restore, the allocator holds only the null block
+      (``assert_drained``).
+
+    The storm keeps deadlines and retry caps off — escalation via the
+    misprediction EWMA must serve *everything*; shed-path coverage lives
+    in tests/test_chaos.py where typed sheds are asserted per-reason."""
+    import copy
+    import json
+    import os
+
+    from repro.configs import get_config
+    from repro.serving.engine import PagedContinuousEngine, drive_paged
+    from repro.serving.faults import FaultEvent, FaultInjector
+    from repro.serving.paged_cache import NULL_SEQ
+
+    cfg = get_config(arch).reduced(num_layers=2, d_model=64)
+    reqs = _engine_perf_requests(n_requests, max_gen)
+
+    def run(faults, num_blocks):
+        eng = PagedContinuousEngine(
+            cfg, max_concurrency=n_requests, num_blocks=num_blocks,
+            block_tokens=block_tokens, max_len=max_len, max_gen=max_gen,
+            faults=faults)
+        t0 = time.perf_counter()
+        st = drive_paged(eng, copy.deepcopy(reqs), max_steps=2_000)
+        return eng, st, time.perf_counter() - t0
+
+    # size the pool to *exactly* the accurate-prediction footprint plus
+    # null block and one spare: the fault-free reference fits without
+    # evictions while the storm's pool shrink has real teeth
+    sizer = PagedContinuousEngine(
+        cfg, max_concurrency=n_requests, num_blocks=4 * n_requests * max_gen,
+        block_tokens=block_tokens, max_len=max_len, max_gen=max_gen)
+    num_blocks = sum(
+        sizer.allocator.blocks_needed(len(sizer._prompt_ids(r)) + max_gen)
+        for r in reqs) + 2
+
+    ref_eng, ref_st, _ = run(None, num_blocks)
+    if ref_st["served"] != n_requests:
+        raise RuntimeError(
+            f"chaos_storm: fault-free reference served "
+            f"{ref_st['served']}/{n_requests} — pool sized too small")
+    # every event by window 2: short fused workloads finish in very few
+    # windows, and an event scheduled past the last window is a no-op
+    inj = FaultInjector([
+        FaultEvent(window=1, kind="pool_shrink", blocks=num_blocks // 3),
+        FaultEvent(window=1, kind="predict_skew", factor=0.25),
+        FaultEvent(window=1, kind="poison_logits"),
+        FaultEvent(window=2, kind="stall", ticks=4),
+        FaultEvent(window=4, kind="pool_restore"),
+    ])
+    eng, st, wall = run(inj, num_blocks)
+    inj.release(eng.allocator)            # an unrestored plan is not a leak
+    try:
+        eng.assert_drained()
+        drained = 1
+    except Exception:
+        drained = 0
+    stranded = sum(len(t) for s, t in eng.allocator.tables.items()
+                   if s != NULL_SEQ and t)
+    bitexact = int(all(eng.generated[rid] == ref_eng.generated.get(rid)
+                       for rid in eng.generated))
+    section = {
+        "storm": {
+            "completed": int(st["served"]),
+            "shed": len(st["shed"]),
+            "deadline_misses": int(st["deadline_misses"]),
+            "quarantined": int(st["quarantined"]),
+            "evictions": int(st["evictions"]),
+            "retries_max": int(st["retries_max"]),
+            "hung": int(bool(st["unserved"]) or st["steps"] >= 2_000),
+            "accounted": int(st["served"] + len(st["shed"]) == n_requests),
+            "bitexact_survivors": bitexact,
+            "stranded_blocks": int(stranded),
+            "drained": drained,
+            "faults": inj.counters(),
+            "wall_s": wall},
+        "config": {"arch": arch, "reduced": True, "d_model": 64,
+                   "num_layers": 2, "n_requests": n_requests,
+                   "max_gen": max_gen, "max_len": max_len,
+                   "block_tokens": block_tokens,
+                   "num_blocks": num_blocks}}
+    if out_path:
+        doc = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                doc = json.load(f)
+        doc["schema_version"] = BENCH_ENGINE_SCHEMA_VERSION
+        doc["chaos"] = section
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+    s = section["storm"]
+    return [("chaos/storm", wall * 1e6,
+             f"completed={s['completed']}/{n_requests} shed={s['shed']} "
+             f"quarantined={s['quarantined']} evictions={s['evictions']} "
+             f"retries_max={s['retries_max']} hung={s['hung']} "
+             f"bitexact={s['bitexact_survivors']} "
+             f"stranded={s['stranded_blocks']}")]
 
 
 def _engine_perf_requests(n_requests: int, max_gen: int):

@@ -47,6 +47,10 @@ SUITES = {
     # (schema v3) into BENCH_engine.json
     "radix": lambda fast: E.radix_prefix_sweep(
         n_requests=6 if fast else 8),
+    # §14 degradation contract under a scripted fault storm; merges the
+    # chaos section (schema v5) into BENCH_engine.json
+    "chaos": lambda fast: E.chaos_storm(
+        n_requests=4 if fast else 6, max_gen=8 if fast else 12),
 }
 
 

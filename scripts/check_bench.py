@@ -23,6 +23,9 @@ acceptance criteria of the PRs that shipped them:
   the no-cache baseline, hit-rate 0 >= 1.0x (cache-on never slower at
   zero hits), exactly one prefill dispatch per single-bucket wave, and
   retries prefill one token each
+- ISSUE 7: the fault-storm degradation contract (DESIGN.md §14) — no
+  hang, no strand, every request served or typed-shed, surviving
+  streams bit-exact vs the fault-free reference run
 """
 from __future__ import annotations
 
@@ -52,9 +55,14 @@ FLOORS = [
     (("prefix_cache", "retry_storm", "tokens_saved"), 0.9, "min"),
     (("prefix_cache", "concurrency_gain_at_equal_theta"), 2.0, "ratio"),
     (("radix_prefix", "head_saved_vs_exact_match"), 0.5, "ratio"),
+    (("chaos", "storm", "hung"), 0, "exact"),
+    (("chaos", "storm", "stranded_blocks"), 0, "exact"),
+    (("chaos", "storm", "drained"), 1, "exact"),
+    (("chaos", "storm", "bitexact_survivors"), 1, "exact"),
+    (("chaos", "storm", "accounted"), 1, "exact"),
 ]
 
-MIN_SCHEMA_VERSION = 4
+MIN_SCHEMA_VERSION = 5
 
 
 def _get(doc, path):

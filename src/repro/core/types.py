@@ -22,6 +22,10 @@ class Request:
     predicted_gen_length: Optional[int] = None
     # lifecycle
     finish_time: Optional[float] = None
+    # per-request deadline in engine scheduler-clock ticks (decode
+    # iterations + stall ticks), counted from admission; None defers to
+    # the engine's default_ttl (DESIGN.md §14)
+    ttl_steps: Optional[int] = None
     req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
     @property

@@ -62,7 +62,8 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
                              strategy: str, seed: int = 0, *,
                              num_blocks: int = 128, block_tokens: int = 16,
                              max_concurrency: int = 16,
-                             prefix_cache: bool = False) -> dict:
+                             prefix_cache: bool = False,
+                             ttl_steps: int | None = None) -> dict:
     """Continuous paged serving for real on CPU: MagnusService drives
     admission (prediction + block accounting) against the same
     BlockAllocator the engine stores KV pages in (DESIGN.md §8).  The
@@ -71,14 +72,17 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     windows (§9).  With
     ``prefix_cache`` the service's LCP-aware footprints and the engine's
     ref-counted radix-shared instruction pages use ONE RadixPrefixCache
-    (§10-§11)."""
+    (§10-§11).  One :class:`MispredictionEWMA` is shared between the
+    batcher's footprints and the engine's reservations (§14), so both
+    sides of admission apply the same adaptive headroom; ``ttl_steps``
+    sets a default per-request deadline in scheduler-clock ticks."""
     import time
 
     from repro.core.magnus import MagnusConfig, MagnusService
     from repro.core.predictor import GenerationLengthPredictor
     from repro.core.wma import MemoryModel
     from repro.serving.engine import PagedContinuousEngine, drive_paged
-    from repro.serving.paged_cache import BlockAllocator
+    from repro.serving.paged_cache import BlockAllocator, MispredictionEWMA
 
     cfg = get_config(arch).reduced()
     memory = MemoryModel(cfg, hbm_bytes=2 * 2 ** 30, max_len=200, max_gen=32)
@@ -89,10 +93,14 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
                         MagnusConfig(strategy=strategy,
                                      prefix_sharing=prefix_cache),
                         predictor=predictor, allocator=allocator)
+    ewma = MispredictionEWMA()
+    svc.memory.headroom = ewma
     engine = PagedContinuousEngine(cfg, max_concurrency=max_concurrency,
                                    max_len=200, max_gen=32,
                                    allocator=allocator,
-                                   prefix_cache=svc.prefix_cache or False)
+                                   prefix_cache=svc.prefix_cache or False,
+                                   mispredict=ewma,
+                                   default_ttl=ttl_steps)
     wl = poisson_workload(rate, duration, seed=seed, max_len=200, max_gen=32)
     for r in wl:
         svc.on_request(r, r.arrival_time)   # prediction + Algorithm-1 acct
@@ -126,7 +134,14 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
             "host_syncs_per_token": round(
                 engine.host_syncs / max(total_tokens, 1), 4),
             "mean_block_utilization": round(
-                sum(util) / max(len(util), 1), 3)}
+                sum(util) / max(len(util), 1), 3),
+            # robustness counters (DESIGN.md §14)
+            "retries_max": st["retries_max"],
+            "deadline_misses": st["deadline_misses"],
+            "quarantined": st["quarantined"],
+            "shed": len(st["shed"]),
+            "requeue_prefix_hits": st["requeue_prefix_hits"],
+            "headroom": ewma.snapshot()}
 
 
 def main() -> None:
@@ -148,6 +163,10 @@ def main() -> None:
                     help="paged engine block size; matches shorter than "
                          "one block are treated as misses, so short app "
                          "templates need a smaller block to hit")
+    ap.add_argument("--ttl-steps", type=int, default=None,
+                    help="paged engine: default per-request deadline in "
+                         "scheduler-clock ticks from admission; expired "
+                         "requests are shed and counted (DESIGN.md §14)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -157,7 +176,8 @@ def main() -> None:
                                            args.duration, args.strategy,
                                            args.seed,
                                            block_tokens=args.block_tokens,
-                                           prefix_cache=args.prefix_cache)
+                                           prefix_cache=args.prefix_cache,
+                                           ttl_steps=args.ttl_steps)
         else:
             out = run_engine_backend(args.arch, args.rate, args.duration,
                                      args.strategy, args.seed)

@@ -32,9 +32,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from collections import deque
-from typing import Deque, Dict, Iterable, List, Optional, Tuple
+from typing import Deque, Dict, Iterable, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,14 +47,45 @@ from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
 from repro.core.wma import batch_wma
 from repro.models import model as M
-from repro.serving.paged_cache import (BlockAllocator, NULL_SEQ,
-                                       PrefixMatch, RadixPrefixCache)
+from repro.serving.faults import FaultInjector, Shed
+from repro.serving.paged_cache import (BlockAllocator, MispredictionEWMA,
+                                       NULL_SEQ, PrefixMatch,
+                                       RadixPrefixCache)
 from repro.workload.tokenizer import encode
 
 
 class EngineFull(RuntimeError):
     """Admission refused: no free slot / not enough free KV blocks.
-    Callers must keep the request queued and retry after a step()."""
+    Callers must keep the request queued and retry after a step().
+
+    ``evicted`` is a typed field (default ``()``): admission itself never
+    evicts, but the attribute exists on every instance so catch sites can
+    requeue ``e.evicted`` without hasattr probing (DESIGN.md §14)."""
+
+    def __init__(self, msg: str = "", *,
+                 evicted: Tuple[Request, ...] = ()):
+        super().__init__(msg)
+        self.evicted: Tuple[Request, ...] = tuple(evicted)
+
+
+class PoolExhausted(MemoryError, EngineFull):
+    """Decode-time growth cannot proceed: the pool is too small for the
+    growing request, its table overflowed ``max_len + max_gen``, or a
+    foreign sequence on a shared allocator holds the blocks.
+
+    Typed replacement for the ad-hoc ``e.evicted = evicted`` attribute
+    smuggling: ``evicted`` carries the requests evicted earlier in the
+    same failed ``step_window`` (callers must requeue them), ``culprit``
+    the request whose growth raised — already freed from its slot, so
+    the engine itself stays serviceable and drainable after the raise.
+    Subclasses :class:`MemoryError` so pre-§14 ``except MemoryError``
+    call sites keep working."""
+
+    def __init__(self, msg: str = "", *,
+                 evicted: Tuple[Request, ...] = (),
+                 culprit: Optional[Request] = None):
+        EngineFull.__init__(self, msg, evicted=evicted)
+        self.culprit = culprit
 
 
 _BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024, 2048)
@@ -390,7 +422,12 @@ class PagedContinuousEngine:
                  max_gen: int = 64, dtype=jnp.float32,
                  allocator: Optional[BlockAllocator] = None,
                  fuse: bool = True, warmup: bool = False,
-                 prefix_cache=False):
+                 prefix_cache=False,
+                 faults: Optional[FaultInjector] = None,
+                 retry_budget: int = 3,
+                 default_ttl: Optional[int] = None,
+                 mispredict: Optional[MispredictionEWMA] = None,
+                 nan_guard: Optional[bool] = None):
         ok, why = M.supports_paged(cfg)
         if not ok:
             raise NotImplementedError(f"{cfg.name}: {why}")
@@ -438,6 +475,27 @@ class PagedContinuousEngine:
         self.prefill_tokens = 0   # tokens actually run through a prefill
         self.prefill_dispatches = 0  # variable-prefix wave dispatches
         self.cow_copies = 0       # copy-on-write block clones performed
+        # -- robustness / fault-lifecycle state (DESIGN.md §14) ----------
+        self.faults = faults
+        self.retry_budget = retry_budget
+        self.default_ttl = default_ttl
+        self.mispredict = (mispredict if mispredict is not None
+                           else MispredictionEWMA())
+        # NaN/Inf logits quarantine: on when faults are injected (the
+        # storm the guard exists for) unless explicitly forced — the
+        # extra per-window readback must not tax fault-free serving
+        self._nan_guard = (nan_guard if nan_guard is not None
+                           else faults is not None)
+        self.clock = 0            # scheduler clock: decode iters + stalls
+        self.windows = 0          # step_window calls (fault-plan time base)
+        self.stall_ticks = 0
+        self.deadline_misses = 0
+        self.quarantined = 0      # NaN/Inf-poisoned slots removed
+        self.requeue_prefix_hits = 0  # evicted requests readmitted via radix
+        self.shed_log: List[Shed] = []
+        self.retries: Dict[int, int] = {}        # req_id -> eviction count
+        self._observed_gen: Dict[int, int] = {}  # req_id -> max progress
+        self._requeued: Set[int] = set()         # req_ids evicted at least once
         self.window_stats: Optional[Dict[str, int]] = None
         self.generated: Dict[int, List[int]] = {}   # finished req -> tokens
         # admission hot-path memo: encoded prompt ids per (instruction,
@@ -559,6 +617,19 @@ class PagedContinuousEngine:
             n_prompt = len(self._prompt_ids(req))
         g = (req.predicted_gen_length
              if req.predicted_gen_length is not None else self.max_gen)
+        if self.faults is not None:
+            g = self.faults.corrupt_prediction(req, g, self.windows)
+        # misprediction guard rails (§14): the per-app EWMA headroom
+        # multiplier damps under-prediction eviction storms for every
+        # admission of that app...
+        h = self.mispredict.factor(req.app)
+        if h > 1.0:
+            g = int(math.ceil(g * h))
+        # ...and a request that exhausted its eviction-retry budget
+        # escalates past its observed progress, so the readmission
+        # cannot thrash at the same block boundary again
+        if self.retries.get(req.req_id, 0) >= self.retry_budget:
+            g = max(g, self._observed_gen.get(req.req_id, 0) + 1)
         return n_prompt + max(1, min(g, self.max_gen))
 
     def _reclaimable_blocks(self, keep=None) -> int:
@@ -685,9 +756,20 @@ class PagedContinuousEngine:
             self._publish_queue.append((tuple(share_ids), list(table)))
             self._wave_pending.append(
                 {"ids": share_ids, "table": list(table), "gen": gen})
+        if cached and req.req_id in self._requeued:
+            # an evicted-then-requeued request re-entered through the
+            # radix hit path: its own published blocks survived eviction,
+            # so the readmission prefills only its suffix (§14 small fix)
+            self.requeue_prefix_hits += 1
+        ttl = (req.ttl_steps if req.ttl_steps is not None
+               else self.default_ttl)
         self.active[slot] = {"req": req, "generated": [],
                              "target": min(req.gen_length, self.max_gen),
-                             "prefix": m.node if m is not None else None}
+                             "prefix": m.node if m is not None else None,
+                             "deadline": (self.clock + ttl
+                                          if ttl is not None else None),
+                             "reserve_tokens": want,
+                             "reserve_g": want - len(ids)}
         return {"slot": slot, "ids": ids, "table": table, "cached": cached,
                 "cow": cow, "gen": gen, "req": req}
 
@@ -851,7 +933,15 @@ class PagedContinuousEngine:
 
     def _evict(self, slot: int) -> Request:
         self._flush_publishes()   # queued spans reference live tables only
-        req = self.active[slot]["req"]
+        a = self.active[slot]
+        req = a["req"]
+        # bounded-retry bookkeeping (§14): count the eviction against the
+        # request's retry budget and remember its decode progress, so an
+        # escalated readmission reserves past the boundary it died at
+        self.retries[req.req_id] = self.retries.get(req.req_id, 0) + 1
+        if len(a["generated"]) > self._observed_gen.get(req.req_id, 0):
+            self._observed_gen[req.req_id] = len(a["generated"])
+        self._requeued.add(req.req_id)
         self._unpin_prefix(slot)
         self.allocator.free_seq(slot)     # shared prefix pages survive:
         self._release(slot)               # the cache still holds a reference
@@ -907,6 +997,15 @@ class PagedContinuousEngine:
                     "paged pool exhausted by sequences outside this engine")
             evicted.append(self._evict(victim))
         table = self.allocator.allocate(slot, need)
+        a = self.active[slot]
+        if len(table) != had and need > a["reserve_tokens"]:
+            # this growth ran past the admission reservation: feed the
+            # misprediction EWMA mid-flight (once per overflow block), so
+            # an under-prediction storm raises the app's headroom before
+            # its victims are even readmitted (§14)
+            self.mispredict.observe(
+                a["req"].app, a["reserve_g"],
+                need - (a["reserve_tokens"] - a["reserve_g"]))
         # copy-on-write: any still-shared block at or past the write
         # cursor must be cloned before the window appends into it (the
         # clone needs a free block; cold cache leaves go first — and
@@ -952,41 +1051,111 @@ class PagedContinuousEngine:
             k = min(k, to_finish, to_boundary)
         return max(k, 1)
 
+    def _expire_deadlines(self) -> None:
+        """Free every active slot past its deadline (checked between
+        windows on the scheduler clock).  An expired request is a typed
+        shed, not an eviction: its blocks are freed, the miss is counted,
+        and it is NOT requeued (§14)."""
+        for slot, a in enumerate(self.active):
+            if a is None or a["deadline"] is None \
+                    or self.clock < a["deadline"]:
+                continue
+            self.shed_log.append(Shed(a["req"], "deadline", self.clock))
+            self.deadline_misses += 1
+            self._unpin_prefix(slot)
+            self.allocator.free_seq(slot)
+            self._release(slot)
+
     def step_window(self, max_steps: Optional[int] = None
                     ) -> Tuple[List[Request], List[Request], int]:
         """Run one fused decode window over all active requests.
         Returns (finished, evicted, steps_run); evicted requests must be
-        requeued by the caller (they restart from scratch on readmit)."""
+        requeued by the caller (they restart from scratch on readmit).
+
+        Window prologue, host-side between windows (DESIGN.md §14):
+        fault events due this window fire first (pool shrink/restore,
+        logits poisoning, stalls), then deadlines are swept, then the
+        NaN/Inf guard quarantines any poisoned slot — all before the
+        grow loop, so surviving slots decode a window identical to the
+        one a fault-free engine would run.  A stalled window burns
+        scheduler-clock ticks and returns ``steps_run == 0`` without
+        dispatching."""
+        self.windows += 1
+        stalled = 0
+        evicted: List[Request] = []
+        if self.faults is not None:
+            # the fault seam fires even with nothing active: a restore
+            # event must be able to un-wedge an engine whose whole active
+            # set was evicted by the matching shrink
+            self._flush_publishes()
+            stalled = self.faults.before_window(self)
+            if stalled:
+                self.clock += stalled
+                self.stall_ticks += stalled
         if not any(a is not None for a in self.active):
             return [], [], 0
         # deferred radix publishes land here — between admission waves,
         # off the admission hot path, and before any grow/evict/finish
         # could free a queued span's blocks
         self._flush_publishes()
-        evicted: List[Request] = []
+        self._expire_deadlines()
+        if self._nan_guard and any(a is not None for a in self.active):
+            # hotlint: sync(§14 NaN/Inf quarantine guard readback)
+            finite = np.isfinite(np.asarray(self.logits)).all(axis=1)
+            self.host_syncs += count_sync()
+            for slot, a in enumerate(self.active):
+                if a is not None and not bool(finite[slot]):
+                    # quarantine: clear the poisoned row (idle rows feed
+                    # the fused argmax, masked) and evict for readmission
+                    # — the restart re-prefills from the prompt, so the
+                    # re-served stream stays bit-exact
+                    self.logits = self.logits.at[slot].set(0.0)
+                    evicted.append(self._evict(slot))
+                    self.quarantined += 1
+        if stalled or not any(a is not None for a in self.active):
+            self.window_stats = None
+            return [], evicted, 0
         try:
             for slot, a in enumerate(self.active):
-                if a is not None:
+                if a is None:
+                    continue
+                try:
                     pairs = self._grow(slot, evicted)
-                    # apply this slot's COW page copies IMMEDIATELY: a
-                    # later slot's _grow may evict this one and recycle
-                    # its clone block — deferring to one batched copy
-                    # would scatter stale pages into the new owner
-                    # (duplicate destinations, undefined winner), and a
-                    # later MemoryError would leave the clone's table
-                    # swap applied but its prefix KV never copied
-                    if pairs:
-                        npairs = _pow2_ceil(len(pairs))
-                        src = np.full(npairs, self.null_block, np.int32)
-                        dst = np.full(npairs, self.null_block, np.int32)
-                        for i, (s, d) in enumerate(pairs):
-                            src[i], dst[i] = s, d
-                        self.pages = self._copy_pages(self.pages, src, dst)
+                except MemoryError:
+                    if self.faults is not None and self.faults.held_blocks:
+                        # transient fault-held pool: evict the growing
+                        # request itself (requeued by the caller) instead
+                        # of failing the window — a pool_restore later in
+                        # the plan lets it finish
+                        evicted.append(self._evict(slot))
+                        continue
+                    raise
+                # apply this slot's COW page copies IMMEDIATELY: a
+                # later slot's _grow may evict this one and recycle
+                # its clone block — deferring to one batched copy
+                # would scatter stale pages into the new owner
+                # (duplicate destinations, undefined winner), and a
+                # later MemoryError would leave the clone's table
+                # swap applied but its prefix KV never copied
+                if pairs:
+                    npairs = _pow2_ceil(len(pairs))
+                    src = np.full(npairs, self.null_block, np.int32)
+                    dst = np.full(npairs, self.null_block, np.int32)
+                    for i, (s, d) in enumerate(pairs):
+                        src[i], dst[i] = s, d
+                    self.pages = self._copy_pages(self.pages, src, dst)
         except MemoryError as e:
-            # don't strand requests evicted earlier in this same step:
-            # hand them to the caller on the exception for requeue
-            e.evicted = evicted
-            raise
+            # don't strand anything on a failed grow: requests evicted
+            # earlier in this same step ride the typed exception for
+            # requeue, and the culprit slot is freed (and attached) so
+            # the engine stays serviceable and drainable after the raise
+            culprit = (self._evict(slot)
+                       if self.active[slot] is not None else None)
+            raise PoolExhausted(str(e), evicted=tuple(evicted),
+                                culprit=culprit) from e
+        if not any(a is not None for a in self.active):
+            self.window_stats = None
+            return [], evicted, 0
         shadow = getattr(self.allocator, "_shadow", None)
         if shadow is not None:
             # the window appends from each slot's write cursor: every
@@ -1021,6 +1190,7 @@ class PagedContinuousEngine:
         toks = np.asarray(toks)
         self.host_syncs += count_sync()
         self.decode_steps += k
+        self.clock += k
         finished = []
         for slot, a in enumerate(self.active):
             if a is None:
@@ -1030,6 +1200,10 @@ class PagedContinuousEngine:
             if len(a["generated"]) >= a["target"]:
                 finished.append(a["req"])
                 self.generated[a["req"].req_id] = a["generated"]
+                # close the misprediction feedback loop (§14): observed
+                # generation length vs the reservation's predicted g
+                self.mispredict.observe(a["req"].app, a["reserve_g"],
+                                        len(a["generated"]))
                 self._unpin_prefix(slot)
                 self.allocator.free_seq(slot)
                 self._release(slot)
@@ -1158,7 +1332,10 @@ class PagedContinuousEngine:
 
 def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
                 max_steps: int = 2_000,
-                refill=None, backlog=None) -> Dict[str, object]:
+                refill=None, backlog=None,
+                queue_cap: Optional[int] = None,
+                max_retries: Optional[int] = None,
+                stall_limit: int = 64) -> Dict[str, object]:
     """The canonical paged serve loop: batched admission until the engine
     refuses, fused decode windows, evictions requeued at the queue front.
     One implementation shared by the benchmark, the launcher, and the
@@ -1170,20 +1347,42 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
     scheduler still holds work, keeping the loop alive (idle-stepping,
     like the pre-refactor launcher) until the scheduler releases it.
 
+    Robustness knobs (DESIGN.md §14) — all off by default, so the
+    fault-free serving discipline is byte-identical to before:
+    ``queue_cap`` bounds the local admission queue (overflow is shed with
+    reason ``queue_full``); ``max_retries`` bounds evict/requeue cycles
+    per request (exhaustion sheds with ``retry_budget`` — with the
+    default ``None`` the engine instead escalates the reservation via
+    its retry budget and serves the request); ``stall_limit`` bounds
+    consecutive no-progress iterations before the queue head is shed
+    with ``admission_stalled`` instead of hanging.  A ``PoolExhausted``
+    window sheds the culprit with reason ``oom`` and requeues the rest.
+
     ``steps`` counts decode *iterations* (one generated token per active
     slot), not windows; ``util`` holds one sample per decode iteration
     (the in-window ramp is reconstructed from ``engine.window_stats``, so
     samples stay comparable across fuse settings and with the per-token
     loop); ``host_syncs`` is the device→host readback count."""
     pending: Deque[Request] = deque(requests)
-    served = steps = peak = evictions = 0
+    served = steps = peak = evictions = no_progress = 0
     syncs0 = engine.host_syncs
+    shed0 = len(engine.shed_log)
+
+    def _shed(req: Request, reason: str) -> None:
+        engine.shed_log.append(Shed(req, reason, engine.clock))
+
+    if queue_cap is not None:
+        while len(pending) > queue_cap:
+            _shed(pending.pop(), "queue_full")
     util: List[float] = []
     while (pending or engine.num_active
            or (backlog() if backlog is not None else False)) \
             and steps < max_steps:
+        admitted = 0
         while True:
-            for _ in range(engine.join_many(pending)):
+            n = engine.join_many(pending)
+            admitted += n
+            for _ in range(n):
                 pending.popleft()
             if pending or refill is None:
                 break                        # head does not fit / no source
@@ -1191,15 +1390,35 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
             if not more:
                 break
             pending.extend(more)
+            if queue_cap is not None:
+                while len(pending) > queue_cap:
+                    _shed(pending.pop(), "queue_full")
         if not (pending or engine.num_active
                 or (backlog() if backlog is not None else False)):
             break
         peak = max(peak, engine.num_active)
-        finished, evicted, k = engine.step_window(max_steps=max_steps - steps)
+        try:
+            finished, evicted, k = engine.step_window(
+                max_steps=max_steps - steps)
+        except PoolExhausted as e:
+            # typed degradation: the culprit is shed, in-window evictions
+            # are requeued, and the loop keeps serving what fits
+            if e.culprit is not None:
+                _shed(e.culprit, "oom")
+            evictions += len(e.evicted)
+            for r in reversed(e.evicted):
+                pending.appendleft(r)
+            steps += 1
+            no_progress += 1
+            continue
         served += len(finished)
         evictions += len(evicted)
         for r in reversed(evicted):
-            pending.appendleft(r)
+            if max_retries is not None \
+                    and engine.retries.get(r.req_id, 0) > max_retries:
+                _shed(r, "retry_budget")
+            else:
+                pending.appendleft(r)
         # reconstruct the per-iteration utilization ramp from the window's
         # post-grow snapshot: one fused window must not contribute a single
         # low-biased sample where k per-token steps contributed k ramping
@@ -1211,7 +1430,24 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
                         for i in range(1, k))
         util.append(engine.utilization())
         steps += max(k, 1)
+        # progress = admissions or finishes; eviction churn and stalled
+        # windows are not progress.  A long decode stretch still counts k
+        # steps toward max_steps, so stall-shedding only fires when the
+        # queue head can never fit (e.g. a fault-shrunk pool)
+        if admitted or finished:
+            no_progress = 0
+        elif not engine.num_active:
+            no_progress += 1
+            if no_progress >= stall_limit and pending:
+                _shed(pending.popleft(), "admission_stalled")
+                no_progress = 0
+    shed = list(engine.shed_log[shed0:])
     return {"served": served, "steps": steps, "peak": peak,
             "evictions": evictions, "util": util,
             "host_syncs": engine.host_syncs - syncs0,
-            "unserved": list(pending)}
+            "unserved": list(pending),
+            "shed": shed,
+            "deadline_misses": engine.deadline_misses,
+            "quarantined": engine.quarantined,
+            "requeue_prefix_hits": engine.requeue_prefix_hits,
+            "retries_max": max(engine.retries.values(), default=0)}

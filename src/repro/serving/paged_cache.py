@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.analysis import sanitizer as _san
@@ -536,6 +537,50 @@ def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
     return n
 
 
+class MispredictionEWMA:
+    """Per-app EWMA of observed/reserved generation-length ratio — the
+    misprediction feedback loop (DESIGN.md §14).
+
+    The engine observes ``(reserved G', actual G)`` at every finish and
+    at every decode-time growth past the reservation; :meth:`factor`
+    turns the smoothed ratio into an adaptive headroom multiplier
+    (clamped to ``[1, max_headroom]``) that both the engine's
+    ``reserve_tokens`` and the batcher's ``PagedMemoryModel.mem_of``
+    apply to predicted lengths.  Because the ratio is measured against
+    the *already-compensated* reservation, the loop self-damps: once the
+    inflated reservations are sufficient, observed/reserved falls back
+    to <= 1 and the headroom decays toward the clamp floor.
+
+    >>> e = MispredictionEWMA(alpha=0.5)
+    >>> e.factor("mt")                      # no evidence: no headroom
+    1.0
+    >>> e.observe("mt", predicted=4, observed=16)
+    >>> e.factor("mt")
+    2.5
+    """
+
+    def __init__(self, alpha: float = 0.3, max_headroom: float = 4.0):
+        self.alpha = alpha
+        self.max_headroom = max_headroom
+        self.ratio: Dict[str, float] = {}
+        self.samples = 0
+
+    def observe(self, app: str, predicted: int, observed: int) -> None:
+        r = observed / max(predicted, 1)
+        prev = self.ratio.get(app, 1.0)
+        self.ratio[app] = (1.0 - self.alpha) * prev + self.alpha * r
+        self.samples += 1
+
+    def factor(self, app: str) -> float:
+        """Adaptive headroom multiplier for ``app``'s predictions."""
+        return min(max(self.ratio.get(app, 1.0), 1.0), self.max_headroom)
+
+    def snapshot(self) -> Dict[str, float]:
+        """Per-app headroom multipliers (reporting)."""
+        return {app: round(self.factor(app), 3)
+                for app in sorted(self.ratio)}
+
+
 @dataclasses.dataclass
 class PagedMemoryModel:
     """MemoryModel-compatible facade: MEM(B) under block-granular
@@ -560,6 +605,13 @@ class PagedMemoryModel:
     block_tokens: int = 16
     allocator: Optional[BlockAllocator] = None
     prefix_sharing: bool = False
+    # misprediction feedback (DESIGN.md §14): when bound to the engine's
+    # MispredictionEWMA, predicted footprints carry the same per-app
+    # headroom multiplier the runtime's reserve_tokens applies, so the
+    # batcher's Algorithm-1 check and the engine admit identically under
+    # an under-prediction storm
+    headroom: Optional[MispredictionEWMA] = dataclasses.field(
+        default=None, repr=False, compare=False)
     _ids_memo: Dict[str, List[int]] = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
@@ -622,6 +674,10 @@ class PagedMemoryModel:
         for r in reqs:
             g = (r.predicted_gen_length if predicted and
                  r.predicted_gen_length is not None else r.gen_length)
+            if predicted and self.headroom is not None:
+                h = self.headroom.factor(r.app)
+                if h > 1.0:
+                    g = min(int(math.ceil(g * h)), self.max_gen)
             span = self.shared_prefix_tokens(r)
             if span:
                 # walk the batch-local trie at LCP granularity: only the

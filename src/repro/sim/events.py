@@ -36,6 +36,12 @@ class Metrics:
     oom_events: int = 0
     duration: float = 0.0
     batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    # robustness counters (DESIGN.md §14) — zero in fault-free runs, so
+    # fault-free summaries stay comparable across commits
+    shed: int = 0
+    deadline_misses: int = 0
+    quarantined: int = 0
+    retries: int = 0
 
     @property
     def request_throughput(self) -> float:
@@ -69,6 +75,10 @@ class Metrics:
             "oom": self.oom_events,
             "mean_batch": round(float(np.mean(self.batch_sizes)), 2)
             if self.batch_sizes else 0.0,
+            "shed": self.shed,
+            "deadline_misses": self.deadline_misses,
+            "quarantined": self.quarantined,
+            "retries": self.retries,
         }
 
 

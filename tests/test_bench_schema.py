@@ -11,8 +11,8 @@ import pytest
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks.extensions import (BENCH_ENGINE_SCHEMA_VERSION,  # noqa: E402
-                                   engine_perf, prefix_cache_sweep,
-                                   radix_prefix_sweep)
+                                   chaos_storm, engine_perf,
+                                   prefix_cache_sweep, radix_prefix_sweep)
 
 ENGINE_KEYS = {"decode_steps", "tokens", "wall_s", "steps_per_s",
                "tokens_per_s", "host_syncs", "host_syncs_per_token"}
@@ -28,6 +28,10 @@ RADIX_MIX_KEYS = {"prefill_tokens", "exact_match_prefill_tokens",
                   "no_cache_prefill_tokens", "hits", "misses",
                   "cow_copies", "radix_nodes", "saved_vs_exact_match",
                   "wall_s"}
+STORM_KEYS = {"completed", "shed", "deadline_misses", "quarantined",
+              "evictions", "retries_max", "hung", "accounted",
+              "bitexact_survivors", "stranded_blocks", "drained",
+              "faults", "wall_s"}
 
 
 @pytest.fixture(scope="module")
@@ -39,6 +43,7 @@ def bench_doc(tmp_path_factory):
                        gen_length=2, repeats=1, out_path=str(out))
     radix_prefix_sweep(n_requests=4, head_words=20, tail_words=10,
                        input_words=5, gen_length=2, out_path=str(out))
+    chaos_storm(n_requests=4, max_gen=8, out_path=str(out))
     return json.loads(out.read_text())
 
 
@@ -136,6 +141,28 @@ def test_bench_radix_prefix_section(bench_doc):
     # sibling sections survived the merge
     assert set(bench_doc["engines"]) == ENGINES
     assert "prefix_cache" in bench_doc
+
+
+def test_bench_chaos_section(bench_doc):
+    """Schema v5: the chaos section records the §14 degradation contract
+    as exact-int indicators — the values scripts/check_bench.py floors
+    pin.  Asserted on the smoke storm too: the contract is
+    size-independent."""
+    s = bench_doc["chaos"]["storm"]
+    assert set(s) == STORM_KEYS
+    assert s["hung"] == 0
+    assert s["accounted"] == 1
+    assert s["bitexact_survivors"] == 1
+    assert s["stranded_blocks"] == 0 and s["drained"] == 1
+    assert s["completed"] + s["shed"] == \
+        bench_doc["chaos"]["config"]["n_requests"]
+    assert s["faults"]["fired"] > 0, "a storm that fired nothing proves " \
+                                     "nothing"
+    for k in ("arch", "n_requests", "max_gen", "num_blocks"):
+        assert k in bench_doc["chaos"]["config"], k
+    # sibling sections survived the merge
+    assert set(bench_doc["engines"]) == ENGINES
+    assert "prefix_cache" in bench_doc and "radix_prefix" in bench_doc
 
 
 def test_bench_engine_sync_accounting(bench_doc):
