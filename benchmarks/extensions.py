@@ -48,6 +48,15 @@
                     ``chaos`` section into ``BENCH_engine.json``
                     (schema v5); floors in scripts/check_bench.py pin
                     the indicators at their contractual values
+- swap_storm      : the §15 suspension contract as a benchmark: a pool
+                    shrink under under-prediction forces live requests
+                    through the host swap tier instead of destruction,
+                    and the indicators pin the contract — zero
+                    re-prefilled tokens for swapped victims, swap round
+                    trips bit-exact vs the fault-free reference, both
+                    tiers drained, and a measured resume-vs-re-prefill
+                    cost comparison.  Writes a ``swap`` section into
+                    ``BENCH_engine.json`` (schema v6)
 """
 from __future__ import annotations
 
@@ -58,7 +67,7 @@ import numpy as np
 
 Row = Tuple[str, float, str]
 
-BENCH_ENGINE_SCHEMA_VERSION = 5
+BENCH_ENGINE_SCHEMA_VERSION = 6
 
 
 def sens_phi(rates=(12.0,), phis=(5e3, 5e4, 5e5, 5e12),
@@ -803,6 +812,155 @@ def chaos_storm(n_requests: int = 6, max_gen: int = 12, max_len: int = 64,
              f"retries_max={s['retries_max']} hung={s['hung']} "
              f"bitexact={s['bitexact_survivors']} "
              f"stranded={s['stranded_blocks']}")]
+
+
+def swap_storm(n_requests: int = 8, max_gen: int = 10,
+               block_tokens: int = 4, num_blocks: int = 24,
+               swap_blocks: int = 64,
+               out_path: str = "BENCH_engine.json",
+               arch: str = "smollm-135m") -> List[Row]:
+    """Suspension-contract storm (DESIGN.md §15): a mid-serve pool shrink
+    under ×-under-prediction forces live requests through the host swap
+    tier, and the section records the §15 contract as exact-int
+    indicators:
+
+    - ``reprefilled_swapped_tokens = 0``: preemption by suspension never
+      re-prefills a swapped victim — resumes restore KV from the host
+      tier instead of recomputing it;
+    - ``swap_roundtrip_bitexact = 1``: the storm really round-tripped
+      images (``swap_outs`` and ``swap_ins`` both > 0) and every
+      survivor stream equals the fault-free reference token-for-token;
+    - ``hung = 0`` / ``accounted = 1`` / ``drained = 1``: the §14
+      degradation contract still holds with the tier in the loop, and
+      at drain both memory tiers are empty;
+    - ``resume_cheaper``: measured mean swap-in cost vs the measured
+      cost of rebuilding a destroyed victim by recompute — re-prefilling
+      its prompt AND regenerating the tokens it had already produced
+      when suspended (the economics the tier exists to buy).  The storm
+      engine is warmed (§10 grid + §15 swap shapes) so both sides time
+      steady-state work, not compilation.
+
+    Requests use distinct instructions (no radix sharing) so the shrink
+    exerts real per-request pressure, and predict ×1 so growth arrives
+    mid-decode."""
+    import copy
+    import json
+    import os
+
+    from repro.configs import get_config
+    from repro.core.types import Request
+    from repro.serving.engine import PagedContinuousEngine, drive_paged
+    from repro.serving.faults import FaultEvent, FaultInjector
+    from repro.serving.paged_cache import NULL_SEQ
+
+    cfg = get_config(arch).reduced(num_layers=2, d_model=64)
+    max_len = 32
+    base = [Request(app=f"a{i % 3}", task="t",
+                    instruction=f"totally distinct instruction {i} words",
+                    user_input=f"user input number {i} more text",
+                    length=14, gen_length=max_gen - 1,
+                    predicted_gen_length=1)
+            for i in range(n_requests)]
+
+    def engine(*, blocks, swap, faults=None, params=None, warmup=False):
+        return PagedContinuousEngine(
+            cfg, params=params, max_concurrency=4, num_blocks=blocks,
+            block_tokens=block_tokens, max_len=max_len, max_gen=max_gen,
+            swap_blocks=swap, faults=faults, warmup=warmup)
+
+    # fault-free roomy reference: the streams every survivor must match
+    ref_eng = engine(blocks=4 * num_blocks, swap=0)
+    ref_st = drive_paged(ref_eng, copy.deepcopy(base), max_steps=2_000)
+    if ref_st["served"] != n_requests:
+        raise RuntimeError(
+            f"swap_storm: fault-free reference served "
+            f"{ref_st['served']}/{n_requests} — refusing to publish")
+
+    inj = FaultInjector([
+        FaultEvent(window=2, kind="pool_shrink", blocks=num_blocks // 2),
+        FaultEvent(window=9, kind="pool_restore"),
+    ])
+    eng = engine(blocks=num_blocks, swap=swap_blocks, faults=inj,
+                 params=ref_eng.params, warmup=True)
+    t0 = time.perf_counter()
+    st = drive_paged(eng, copy.deepcopy(base), max_steps=2_000)
+    wall = time.perf_counter() - t0
+    inj.release(eng.allocator)
+    try:
+        eng.assert_drained()
+        drained = 1
+    except Exception:
+        drained = 0
+    stranded = sum(len(t) for s, t in eng.allocator.tables.items()
+                   if s != NULL_SEQ and t)
+    bitexact = int(
+        st["swap_outs"] > 0 and st["swap_ins"] > 0
+        and all(eng.generated[rid] == ref_eng.generated.get(rid)
+                for rid in eng.generated))
+
+    # measured economics: mean swap-in restore vs the recompute cost a
+    # destructive eviction forces — re-prefill the prompt and regenerate
+    # the tokens the victim had produced when it was suspended.  The
+    # probe serves that exact workload on the hot, roomy, fault-free
+    # reference engine (no queueing, no pressure): a LOWER bound on the
+    # real loss, so beating it is the conservative claim.
+    mean_ctx = eng.swapped_ctx_tokens / max(st["swap_outs"], 1)
+    lost_gen = max(1, round(mean_ctx) - base[0].length)
+    probe = copy.deepcopy(base[:4])
+    for r in probe:
+        r.gen_length = lost_gen
+        r.predicted_gen_length = lost_gen
+    t0 = time.perf_counter()
+    pst = drive_paged(ref_eng, probe, max_steps=2_000)
+    reprefill_s = (time.perf_counter() - t0) / max(pst["served"], 1)
+    resume_s = eng.swap_in_s / max(st["swap_ins"], 1)
+
+    section = {
+        "storm": {
+            "completed": int(st["served"]),
+            "shed": len(st["shed"]),
+            "evictions": int(st["evictions"]),
+            "swap_outs": int(st["swap_outs"]),
+            "swap_ins": int(st["swap_ins"]),
+            "swapped_blocks": int(eng.swapped_blocks),
+            "swap_reused_blocks": int(eng.swap_reused_blocks),
+            "reprefilled_swapped_tokens":
+                int(st["reprefilled_swapped_tokens"]),
+            "swap_roundtrip_bitexact": bitexact,
+            "hung": int(bool(st["unserved"]) or st["steps"] >= 2_000),
+            "accounted": int(st["served"] + len(st["shed"]) == n_requests),
+            "stranded_blocks": int(stranded),
+            "drained": drained,
+            "resume_s_per_swap_in": resume_s,
+            "reprefill_s_per_request": reprefill_s,
+            "reprefill_gen_tokens": int(lost_gen),
+            "resume_cheaper": int(resume_s < reprefill_s),
+            "faults": inj.counters(),
+            "wall_s": wall},
+        "config": {"arch": arch, "reduced": True, "d_model": 64,
+                   "num_layers": 2, "n_requests": n_requests,
+                   "max_gen": max_gen, "max_len": max_len,
+                   "block_tokens": block_tokens,
+                   "num_blocks": num_blocks,
+                   "swap_blocks": swap_blocks}}
+    if out_path:
+        doc = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                doc = json.load(f)
+        doc["schema_version"] = BENCH_ENGINE_SCHEMA_VERSION
+        doc["swap"] = section
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+    s = section["storm"]
+    return [("swap/storm", wall * 1e6,
+             f"completed={s['completed']}/{n_requests} "
+             f"swap_outs={s['swap_outs']} swap_ins={s['swap_ins']} "
+             f"reprefilled={s['reprefilled_swapped_tokens']} "
+             f"bitexact={s['swap_roundtrip_bitexact']} "
+             f"evictions={s['evictions']} hung={s['hung']} "
+             f"drained={s['drained']} "
+             f"resume_cheaper={s['resume_cheaper']}")]
 
 
 def _engine_perf_requests(n_requests: int, max_gen: int):

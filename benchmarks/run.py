@@ -51,6 +51,11 @@ SUITES = {
     # chaos section (schema v5) into BENCH_engine.json
     "chaos": lambda fast: E.chaos_storm(
         n_requests=4 if fast else 6, max_gen=8 if fast else 12),
+    # §15 suspension contract: a pool-shrink storm preempts through the
+    # host swap tier; merges the swap section (schema v6) into
+    # BENCH_engine.json
+    "swap": lambda fast: E.swap_storm(
+        n_requests=6 if fast else 8),
 }
 
 

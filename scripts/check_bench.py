@@ -26,6 +26,10 @@ acceptance criteria of the PRs that shipped them:
 - ISSUE 7: the fault-storm degradation contract (DESIGN.md §14) — no
   hang, no strand, every request served or typed-shed, surviving
   streams bit-exact vs the fault-free reference run
+- ISSUE 8: the suspension contract (DESIGN.md §15) — a pool-shrink
+  storm round-trips victims through the host swap tier with ZERO
+  re-prefilled tokens, bit-exact resumed streams, and a measured
+  swap-in cost below the recompute cost of a destroyed victim
 """
 from __future__ import annotations
 
@@ -60,9 +64,15 @@ FLOORS = [
     (("chaos", "storm", "drained"), 1, "exact"),
     (("chaos", "storm", "bitexact_survivors"), 1, "exact"),
     (("chaos", "storm", "accounted"), 1, "exact"),
+    (("swap", "storm", "reprefilled_swapped_tokens"), 0, "exact"),
+    (("swap", "storm", "swap_roundtrip_bitexact"), 1, "exact"),
+    (("swap", "storm", "hung"), 0, "exact"),
+    (("swap", "storm", "drained"), 1, "exact"),
+    (("swap", "storm", "accounted"), 1, "exact"),
+    (("swap", "storm", "resume_cheaper"), 1, "exact"),
 ]
 
-MIN_SCHEMA_VERSION = 5
+MIN_SCHEMA_VERSION = 6
 
 
 def _get(doc, path):

@@ -34,6 +34,11 @@ from typing import Dict, List, Set, Tuple
 #: holder tag the radix prefix cache uses for its retained references
 CACHE_HOLDER = "cache"
 
+#: holder tag the host swap tier uses for device blocks it keeps alive
+#: while a host copy of their contents exists (DESIGN.md §15) — the hold
+#: certifies the block immutable, so writes into it are violations
+SWAP_HOLDER = "swap"
+
 
 def sanitize_enabled() -> bool:
     """True when the process runs with ``REPRO_SANITIZE=1`` (or any non-0)."""
@@ -63,6 +68,13 @@ class DoubleFreeError(SanitizerError):
 
 class SharedWriteError(SanitizerError):
     """A sequence wrote into a block another holder still references."""
+
+
+class SwappedBlockError(SharedWriteError):
+    """A write targeted a block whose contents are mirrored on the host
+    swap tier (held under ``SWAP_HOLDER``) — the tier's dedup map would
+    silently go stale.  Subclasses :class:`SharedWriteError` so existing
+    shared-write handlers keep catching it."""
 
 
 class SyncLedgerError(SanitizerError):
@@ -128,6 +140,8 @@ class ShadowAllocator:
         self.holders: Dict[int, List[object]] = {}
         self.materialized: Set[object] = set()
         self.trace: Dict[int, List[str]] = {}
+        #: keys (req ids) whose KV currently lives on the host swap tier
+        self.swapped: Set[object] = set()
 
     def _log(self, block: int, event: str) -> None:
         log = self.trace.setdefault(block, [])
@@ -168,6 +182,16 @@ class ShadowAllocator:
     def on_free_seq(self, seq) -> None:
         self.materialized.discard(seq)
 
+    def on_swap_out(self, key) -> None:
+        """``key``'s KV image moved to the host tier (DESIGN.md §15)."""
+        self.swapped.add(key)
+        # residency is per-image; the tier's device holds are tracked as
+        # ordinary SWAP_HOLDER references via on_retain/on_release
+
+    def on_swap_in(self, key) -> None:
+        """``key``'s image left the host tier (resumed *or* dropped)."""
+        self.swapped.discard(key)
+
     def mark_materialized(self, seq) -> None:
         """``seq``'s KV pages now hold real data other seqs may share."""
         self.materialized.add(seq)
@@ -176,8 +200,9 @@ class ShadowAllocator:
         """``writer`` is about to write KV into ``blocks``.
 
         A write is a violation when another holder of the block is the
-        prefix cache or an already-materialized sequence — their KV would
-        be silently clobbered.  Not-yet-materialized holders are fine:
+        prefix cache, the host swap tier, or an already-materialized
+        sequence — their KV (or the tier's host mirror of it) would be
+        silently clobbered.  Not-yet-materialized holders are fine:
         §12's publish-then-admit shares a publisher's blocks with same-wave
         sharers *before* the wave dispatches.
         """
@@ -186,6 +211,11 @@ class ShadowAllocator:
             if writer in others:
                 others.remove(writer)
             for h in others:
+                if h == SWAP_HOLDER:
+                    raise SwappedBlockError(
+                        f"seq {writer} writing block {b} whose contents "
+                        f"are host-resident on the swap tier (all holders "
+                        f"{self.holders.get(b)}); trace={self.trace.get(b)}")
                 if h == CACHE_HOLDER or h in self.materialized:
                     raise SharedWriteError(
                         f"seq {writer} writing block {b} still held by "
@@ -202,13 +232,14 @@ def maybe_shadow(alloc) -> "ShadowAllocator | None":
 # drain-time accounting (always available, sanitizer on or off)
 # ---------------------------------------------------------------------------
 
-def check_allocator(alloc, cache=None) -> None:
+def check_allocator(alloc, cache=None, swap=None) -> None:
     """Audit a ``BlockAllocator``'s books.
 
     Checks block conservation (free + live == pool), free-list uniqueness,
     and that every live refcount is explained by exactly the block-table
-    occurrences plus the radix cache's retained blocks.  With the sanitizer
-    on, also cross-checks the shadow's holder counts.
+    occurrences plus the radix cache's retained blocks plus the swap
+    tier's device holds.  With the sanitizer on, also cross-checks the
+    shadow's holder counts.
     """
     free = list(alloc.free_blocks())
     if len(set(free)) != len(free):
@@ -229,6 +260,9 @@ def check_allocator(alloc, cache=None) -> None:
     if cache is not None:
         for b in cache.retained_blocks():
             expected[b] = expected.get(b, 0) + 1
+    if swap is not None:
+        for b in swap.device_holds():
+            expected[b] = expected.get(b, 0) + 1
     if expected != live:
         bad = {b: (expected.get(b, 0), live.get(b, 0))
                for b in set(expected) | set(live)
@@ -247,8 +281,9 @@ def check_allocator(alloc, cache=None) -> None:
 
 def check_engine_drained(engine) -> None:
     """After the queue drains: every non-pinned block is back on the free
-    list, no seq table survives, and the allocator's books balance (cache-
-    retained blocks are legitimate survivors)."""
+    list, no seq table survives, both memory tiers are empty (no suspended
+    image, no host slot in use, no tier device hold), and the allocator's
+    books balance (cache-retained blocks are legitimate survivors)."""
     active = [i for i, a in enumerate(engine.active) if a is not None]
     if active:
         raise BlockLeakError(
@@ -259,4 +294,22 @@ def check_engine_drained(engine) -> None:
     if stray:
         raise BlockLeakError(
             f"drained engine still owns block tables for seqs {stray}")
-    check_allocator(engine.allocator, getattr(engine, "prefix_cache", None))
+    swap = getattr(engine, "swap", None)
+    if swap is not None:
+        suspended = sorted(getattr(engine, "_swapped", ()))
+        if suspended:
+            raise BlockLeakError(
+                f"drained engine still holds suspended images for "
+                f"requests {suspended}")
+        if not swap.empty:
+            raise BlockLeakError(
+                f"host swap tier not empty at drain: "
+                f"{swap.used_slots} slots used, maps for "
+                f"{sorted(map(repr, swap.maps))}, device holds "
+                f"{sorted(swap.device_holds())}")
+    shadow = getattr(engine.allocator, "_shadow", None)
+    if shadow is not None and shadow.swapped:
+        raise BlockLeakError(
+            f"shadow residency registry not drained: {shadow.swapped}")
+    check_allocator(engine.allocator, getattr(engine, "prefix_cache", None),
+                    swap)

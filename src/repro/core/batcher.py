@@ -19,6 +19,37 @@ from repro.core.wma import MemoryModel, batch_wma_of
 class BatcherConfig:
     wma_threshold: float = 50_000.0   # Φ (paper §IV-B)
     max_batch_size: Optional[int] = None  # GLP ablation: cap β (e.g. 7)
+    radix_aware: bool = False         # order dispatched batches for §12 waves
+    block_tokens: int = 16            # engine block size for suffix buckets
+
+
+def order_admission_queue(requests: List[Request],
+                          block_tokens: int = 16) -> List[Request]:
+    """Order a dispatch batch so radix-aware waves admit cheaply
+    (DESIGN.md §12).
+
+    Same-template requests (identical ``(app, task, instruction)``) are
+    grouped adjacently in first-seen template order, so each radix chain
+    lands in ONE admission wave — the wave's publisher prefills the full
+    prompt once and every follower shares its just-claimed chain instead
+    of re-prefilling the template in a later wave.  Within a template
+    group, requests are sub-ordered by the power-of-two block bucket of
+    their prompt length: the engine pads each wave's suffixes to one
+    bucket per dispatch, so same-bucket suffixes coalesce into a single
+    prefill call.  The sort is stable — arrival order breaks all ties —
+    and never adds or drops a request.
+    """
+    first_seen: dict = {}
+    for r in requests:
+        first_seen.setdefault((r.app, r.task, r.instruction),
+                              len(first_seen))
+
+    def key(r: Request):
+        blocks = -(-max(int(r.length), 1) // max(block_tokens, 1))
+        return (first_seen[(r.app, r.task, r.instruction)],
+                (blocks - 1).bit_length())
+
+    return sorted(requests, key=key)
 
 
 class AdaptiveBatcher:
@@ -51,7 +82,15 @@ class AdaptiveBatcher:
         return nb
 
     def pop(self, batch: Batch) -> None:
+        """Remove a batch at dispatch time.  With ``radix_aware`` the
+        batch's requests are reordered in place (:func:`
+        order_admission_queue`) so the engine's ``join_many`` sees each
+        radix chain as one publisher-plus-followers wave with coalesced
+        suffix buckets — fewer prefill dispatches for the same tokens."""
         self.queue.remove(batch)
+        if self.cfg.radix_aware:
+            batch.requests[:] = order_admission_queue(
+                batch.requests, self.cfg.block_tokens)
 
     def handle_oom(self, batch: Batch, now: float) -> Tuple[Batch, Batch]:
         """Even split, both halves uninsertable, back to the queue."""

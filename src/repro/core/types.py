@@ -2,10 +2,31 @@
 from __future__ import annotations
 
 import dataclasses
+import enum
 import itertools
 from typing import List, Optional
 
 _ids = itertools.count()
+
+
+class ShedReason(str, enum.Enum):
+    """Typed load-shed reasons — the single source of truth shared by
+    ``serving.faults.Shed``, ``drive_paged`` and the sim metrics, so a
+    new reason cannot silently diverge between layers (DESIGN.md §14).
+
+    ``str``-valued so members compare equal to the plain strings the
+    drivers and stats dicts already use (``"oom" in SHED_REASONS``).
+    """
+    DEADLINE = "deadline"            # ttl_steps expired on the clock
+    RETRY_BUDGET = "retry_budget"    # eviction-retry budget exhausted
+    QUEUE_FULL = "queue_full"        # bounded admission queue overflow
+    ADMISSION_STALLED = "admission_stalled"  # no progress for stall_limit
+    OOM = "oom"                      # PoolExhausted culprit
+    SWAPPED_TIMEOUT = "swapped_timeout"  # suspended to host, never resumed
+
+
+#: validated reason strings, in declaration order (``Shed.reason``)
+SHED_REASONS = tuple(r.value for r in ShedReason)
 
 
 @dataclasses.dataclass

@@ -63,7 +63,8 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
                              num_blocks: int = 128, block_tokens: int = 16,
                              max_concurrency: int = 16,
                              prefix_cache: bool = False,
-                             ttl_steps: int | None = None) -> dict:
+                             ttl_steps: int | None = None,
+                             swap_blocks: int = 0) -> dict:
     """Continuous paged serving for real on CPU: MagnusService drives
     admission (prediction + block accounting) against the same
     BlockAllocator the engine stores KV pages in (DESIGN.md §8).  The
@@ -75,7 +76,10 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     (§10-§11).  One :class:`MispredictionEWMA` is shared between the
     batcher's footprints and the engine's reservations (§14), so both
     sides of admission apply the same adaptive headroom; ``ttl_steps``
-    sets a default per-request deadline in scheduler-clock ticks."""
+    sets a default per-request deadline in scheduler-clock ticks;
+    ``swap_blocks`` > 0 enables the host-memory KV swap tier (§15), so
+    pool pressure suspends victims to pinned host pages instead of
+    destroying their KV."""
     import time
 
     from repro.core.magnus import MagnusConfig, MagnusService
@@ -100,7 +104,8 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
                                    allocator=allocator,
                                    prefix_cache=svc.prefix_cache or False,
                                    mispredict=ewma,
-                                   default_ttl=ttl_steps)
+                                   default_ttl=ttl_steps,
+                                   swap_blocks=swap_blocks)
     wl = poisson_workload(rate, duration, seed=seed, max_len=200, max_gen=32)
     for r in wl:
         svc.on_request(r, r.arrival_time)   # prediction + Algorithm-1 acct
@@ -141,6 +146,13 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
             "quarantined": st["quarantined"],
             "shed": len(st["shed"]),
             "requeue_prefix_hits": st["requeue_prefix_hits"],
+            # host swap tier (DESIGN.md §15)
+            "swap_outs": st["swap_outs"],
+            "swap_ins": st["swap_ins"],
+            "swapped_blocks": engine.swapped_blocks,
+            "swap_reused_blocks": engine.swap_reused_blocks,
+            "reprefilled_swapped_tokens": st["reprefilled_swapped_tokens"],
+            "swap_in_s": round(engine.swap_in_s, 4),
             "headroom": ewma.snapshot()}
 
 
@@ -167,6 +179,11 @@ def main() -> None:
                     help="paged engine: default per-request deadline in "
                          "scheduler-clock ticks from admission; expired "
                          "requests are shed and counted (DESIGN.md §14)")
+    ap.add_argument("--swap-blocks", type=int, default=0,
+                    help="paged engine: host-memory KV swap tier capacity "
+                         "in blocks (0 disables); under pool pressure live "
+                         "victims suspend to pinned host pages and resume "
+                         "without re-prefilling (DESIGN.md §15)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -177,7 +194,8 @@ def main() -> None:
                                            args.seed,
                                            block_tokens=args.block_tokens,
                                            prefix_cache=args.prefix_cache,
-                                           ttl_steps=args.ttl_steps)
+                                           ttl_steps=args.ttl_steps,
+                                           swap_blocks=args.swap_blocks)
         else:
             out = run_engine_backend(args.arch, args.rate, args.duration,
                                      args.strategy, args.seed)

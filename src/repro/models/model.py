@@ -191,6 +191,18 @@ def copy_pages(pages, src, dst):
     return transformer.copy_pages(pages, src, dst)
 
 
+@hot_path
+def gather_pages(pages, blocks):
+    """Stack pool pages at ``blocks`` for a host swap-out (§15)."""
+    return transformer.gather_pages(pages, blocks)
+
+
+@hot_path
+def scatter_pages(pages, blocks, values):
+    """Scatter swapped-in host pages back into the pools (§15)."""
+    return transformer.scatter_pages(pages, blocks, values)
+
+
 def cache_struct(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
     mod = encdec if _is_encdec(cfg) else transformer
     return mod.cache_struct(cfg, batch, seq, dtype)

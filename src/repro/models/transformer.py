@@ -834,6 +834,26 @@ def copy_pages(pages, src, dst) -> Dict[str, jax.Array]:
     return {"k": cp(pages["k"]), "v": cp(pages["v"])}
 
 
+def gather_pages(pages, blocks) -> jax.Array:
+    """Stack the pools' pages at ``blocks`` for a host swap-out
+    (DESIGN.md §15): one ``[P, L, N, bt, Hkv, D]`` array with the pool
+    axis in sorted key order ("k", "v"), so the single device→host
+    readback of the result is the whole swap transfer.  ``blocks`` is
+    int32 ``[N]``; callers pad to a warmed power-of-two N with the null
+    block and slice the junk rows off host-side."""
+    return jnp.stack([pages[key][:, blocks] for key in sorted(pages)])
+
+
+def scatter_pages(pages, blocks, values) -> Dict[str, jax.Array]:
+    """Write swapped-in host pages back into the device pools — the
+    inverse of :func:`gather_pages`, one scatter per pool.  ``values``
+    is ``[P, L, N, bt, Hkv, D]`` aligned with ``blocks``; pad entries
+    target the null block, whose contents are junk by design."""
+    return {key: pages[key].at[:, blocks].set(
+                values[i].astype(pages[key].dtype))
+            for i, key in enumerate(sorted(pages))}
+
+
 def write_prefill_pages(pages, kv, table) -> Dict[str, jax.Array]:
     """Single-request convenience wrapper over
     :func:`write_prefill_pages_batched` (k, v each [L, 1, S, Hkv, D])."""

@@ -25,6 +25,7 @@ class HardwareSpec:
     hbm_bw: float              # bytes/s per chip
     hbm_bytes: int
     link_bw: float = 50e9      # ICI per link
+    host_bw: float = 16e9      # device<->host (PCIe) per chip
     chips: int = 1             # chips per LLM instance
     efficiency: float = 0.55   # sustained fraction of roofline
 

@@ -48,9 +48,9 @@ from repro.core.types import Batch, Request
 from repro.core.wma import batch_wma
 from repro.models import model as M
 from repro.serving.faults import FaultInjector, Shed
-from repro.serving.paged_cache import (BlockAllocator, MispredictionEWMA,
-                                       NULL_SEQ, PrefixMatch,
-                                       RadixPrefixCache)
+from repro.serving.paged_cache import (BlockAllocator, HostSwapTier,
+                                       MispredictionEWMA, NULL_SEQ,
+                                       PrefixMatch, RadixPrefixCache)
 from repro.workload.tokenizer import encode
 
 
@@ -111,6 +111,19 @@ def _pow2_ceil(n: int) -> int:
     return 1 << (n - 1).bit_length() if n & (n - 1) else n
 
 
+def _restore_slot(tables, positions, active, logits, slot, row, pos,
+                  logits_row):
+    """§15 resume: restore a suspended slot's four engine arrays in ONE
+    dispatch (vs four eager per-array updates — resume latency is the
+    swap tier's sale price).  ``slot`` is a traced np.int32 so a single
+    compile serves every slot.  All four arrays are donated: callers
+    rebind them all."""
+    return (tables.at[slot].set(row),
+            positions.at[slot].set(pos),
+            active.at[slot].set(True),
+            logits.at[slot].set(logits_row))
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted(cfg: ModelConfig, dtype):
     """One jitted entry-point set per (config, dtype), shared by every
@@ -152,6 +165,18 @@ def _jitted(cfg: ModelConfig, dtype):
         # publishing makes every request clone its published tail at
         # its first grow, so this runs once per request, not rarely
         "copy_pages": jax.jit(M.copy_pages, donate_argnames=("pages",)),
+        # §15 host swap tier: gather stacks a suspension's pages for ONE
+        # device→host readback (pages NOT donated — the pool lives on);
+        # scatter writes a resume's host pages back, donated like
+        # copy_pages so the pool is never duplicated mid-serve
+        "gather_pages": jax.jit(M.gather_pages),
+        "scatter_pages": jax.jit(M.scatter_pages,
+                                 donate_argnames=("pages",)),
+        # §15 resume: one fused dispatch restores a suspended slot's
+        # four engine arrays (donated — the caller rebinds them all)
+        "restore_slot": jax.jit(
+            _restore_slot,
+            donate_argnames=("tables", "positions", "active", "logits")),
     }
 
 
@@ -427,7 +452,8 @@ class PagedContinuousEngine:
                  retry_budget: int = 3,
                  default_ttl: Optional[int] = None,
                  mispredict: Optional[MispredictionEWMA] = None,
-                 nan_guard: Optional[bool] = None):
+                 nan_guard: Optional[bool] = None,
+                 swap_blocks: int = 0):
         ok, why = M.supports_paged(cfg)
         if not ok:
             raise NotImplementedError(f"{cfg.name}: {why}")
@@ -457,6 +483,9 @@ class PagedContinuousEngine:
         self._prefill_wave = jt["prefill_wave"]
         self._copy_pages = jt["copy_pages"]
         self._decode_multi = jt["decode_multi_paged"]
+        self._gather_pages = jt["gather_pages"]
+        self._scatter_pages = jt["scatter_pages"]
+        self._restore_slot = jt["restore_slot"]
         self.pages = M.init_paged_cache(
             cfg, self.allocator.num_blocks, self.bt,
             dtype=jnp.float32 if dtype == jnp.float32 else jnp.bfloat16)
@@ -496,6 +525,25 @@ class PagedContinuousEngine:
         self.retries: Dict[int, int] = {}        # req_id -> eviction count
         self._observed_gen: Dict[int, int] = {}  # req_id -> max progress
         self._requeued: Set[int] = set()         # req_ids evicted at least once
+        # -- host-memory swap tier (DESIGN.md §15) -----------------------
+        # ``swap_blocks`` host page slots back non-destructive preemption:
+        # pool pressure suspends a victim's KV image to host instead of
+        # destroying it, and the victim resumes with zero re-prefilled
+        # tokens once blocks free up.  0 = tier off (pre-§15 behavior).
+        self.swap: Optional[HostSwapTier] = (
+            HostSwapTier(swap_blocks) if swap_blocks > 0 else None)
+        self._swapped: Dict[int, Dict[str, object]] = {}  # req_id -> image
+        # req_ids that were suspended and have not resumed: an admission
+        # of one through the prefill path is a re-prefill the §15
+        # invariant forbids — counted exactly, floored at 0 by the bench
+        self._swap_debt: Set[int] = set()
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_blocks = 0        # host page copies performed
+        self.swap_reused_blocks = 0    # dedup/device-shared: no copy
+        self.reprefilled_swapped_tokens = 0
+        self.swapped_ctx_tokens = 0    # context length at each suspension
+        self.swap_in_s = 0.0           # wall time inside _swap_in
         self.window_stats: Optional[Dict[str, int]] = None
         self.generated: Dict[int, List[int]] = {}   # finished req -> tokens
         # admission hot-path memo: encoded prompt ids per (instruction,
@@ -816,6 +864,11 @@ class PagedContinuousEngine:
                 src[i], dst[i] = p["cow"]
                 self.cow_copies += 1
             self.prefill_tokens += len(sfx)
+            if p["req"].req_id in self._swap_debt:
+                # a suspended request came back through the prefill path
+                # instead of _swap_in: the §15 never-re-prefill invariant
+                # is broken — count the wasted tokens exactly
+                self.reprefilled_swapped_tokens += len(sfx)
         # pad rows repeat row 0's slot/table/position (identical duplicate
         # scatter writes) and keep plens[0] for a valid attention gather
         plens[n:] = plens[0]
@@ -886,6 +939,7 @@ class PagedContinuousEngine:
     @hot_path
     def join(self, req: Request) -> int:
         self._flush_publishes()
+        self._resume_swapped()   # suspended requests outrank admissions
         self._wave_pending = []
         plan = self._reserve(req)
         self._prefill_admitted([plan])
@@ -903,6 +957,7 @@ class PagedContinuousEngine:
         not fit (FIFO admission, same discipline as repeated ``join``).
         """
         self._flush_publishes()
+        self._resume_swapped()   # suspended requests outrank admissions
         self._wave_pending = []
         admitted = []
         for req in reqs:
@@ -959,6 +1014,221 @@ class PagedContinuousEngine:
                 best, best_prog = slot, prog
         return best
 
+    # -- host swap tier: suspend / resume (DESIGN.md §15) --------------------
+
+    @property
+    def num_suspended(self) -> int:
+        """Requests suspended on the host tier (images awaiting resume)."""
+        return len(self._swapped)
+
+    def _pick_swap_victim(self, exclude: int) -> Optional[int]:
+        """Victim policy for *suspension*: largest EWMA-inflated predicted
+        remaining work first — the request expected to occupy the pool
+        longest is the one whose blocks buy the most relief — with ties
+        broken toward least progress (smallest image to transfer).  The
+        EWMA term makes the policy misprediction-aware: an app under an
+        under-prediction storm has inflated remaining-work estimates and
+        its requests suspend before well-predicted ones are destroyed."""
+        best, best_key = None, None
+        for slot, a in enumerate(self.active):
+            if a is None or slot == exclude:
+                continue
+            prog = len(a["generated"])
+            remaining = (max(a["reserve_g"] - prog, 1)
+                         * self.mispredict.factor(a["req"].app))
+            key = (remaining, -prog)
+            if best is None or key > best_key:
+                best, best_key = slot, key
+        return best
+
+    @hot_path
+    def _swap_out(self, slot: int) -> bool:
+        """Suspend ``slot``'s request to the host tier: snapshot its pages
+        (one gather + one counted readback for the whole image) and its
+        logits row, free the slot and its device blocks, and register the
+        image with the tier.  Shared blocks swap once: blocks already
+        host-resident are deduplicated, and copied blocks that outlive the
+        ``free_seq`` (radix/sibling holders) stay device-resident under a
+        ``SWAP_HOLDER`` reference so the resume can re-``share`` them.
+        Returns False (nothing changed) when the tier cannot hold the
+        image's fresh pages."""
+        a = self.active[slot]
+        req = a["req"]
+        self._flush_publishes()   # queued spans reference live tables only
+        table = list(self.allocator.tables[slot])
+        fresh = self.swap.fresh_blocks(table)
+        if not self.swap.can_hold(len(fresh)):
+            return False
+        vals = None
+        if fresh:
+            pad = _pow2_ceil(len(fresh))
+            blk = np.full(pad, self.null_block, np.int32)
+            blk[:len(fresh)] = fresh
+            stacked = self._gather_pages(self.pages, blk)
+            # hotlint: sync(§15 swap-out page snapshot — ONE readback per suspension)
+            vals = np.asarray(stacked)[:, :, :len(fresh)]
+            self.host_syncs += count_sync()
+        # np.int32 index: the row gather compiles once for every slot
+        # hotlint: sync(§15 swap-out logits-row snapshot for bit-exact resume)
+        logits_row = np.asarray(self.logits[np.int32(slot)])
+        self.host_syncs += count_sync()
+        image = {"req": req, "generated": a["generated"],
+                 "target": a["target"], "deadline": a["deadline"],
+                 "reserve_tokens": a["reserve_tokens"],
+                 "reserve_g": a["reserve_g"],
+                 "pos": int(self.pos_host[slot]),
+                 "blocks": len(table), "logits": logits_row}
+        self._unpin_prefix(slot)
+        self.allocator.free_seq(slot)
+        self._release(slot)
+        self.swap.swap_out(req.req_id, table, fresh, vals, self.allocator)
+        self._swapped[req.req_id] = image
+        self._swap_debt.add(req.req_id)
+        self.swap_outs += 1
+        self.swapped_blocks += len(fresh)
+        self.swap_reused_blocks += len(table) - len(fresh)
+        self.swapped_ctx_tokens += int(image["pos"])
+        shadow = getattr(self.allocator, "_shadow", None)
+        if shadow is not None:
+            shadow.on_swap_out(req.req_id)
+        return True
+
+    def _swap_out_victim(self, exclude: int) -> bool:
+        """Suspend the policy's victim; True only when device blocks
+        actually freed (a fully-shared image frees nothing — the caller
+        then falls through to the next pressure valve)."""
+        victim = self._pick_swap_victim(exclude)
+        if victim is None:
+            return False
+        before = len(self.allocator.free)
+        if not self._swap_out(victim):
+            return False
+        return len(self.allocator.free) > before
+
+    @hot_path
+    def _swap_in(self, rid: int, image: Dict[str, object],
+                 shared: List[int], host_slots: List[int]) -> None:
+        """Resume a suspended image into a free slot: re-``share`` the
+        device-resident prefix the tier still holds, allocate fresh blocks
+        for the rest, scatter the host pages back (donated, nothing read
+        back), and restore the slot's device/host state bit-exactly —
+        positions, table row, and the pre-suspension logits row, so the
+        next decode window continues the stream with zero re-prefilled
+        tokens."""
+        t0 = time.perf_counter()
+        slot = self.active.index(None)
+        if shared:
+            self.allocator.share(slot, shared)
+        table = self.allocator.allocate(slot, int(image["blocks"]) * self.bt)
+        fresh = table[len(shared):]
+        shadow = getattr(self.allocator, "_shadow", None)
+        if shadow is not None and fresh:
+            shadow.check_write(slot, fresh)
+        if fresh:
+            pad = _pow2_ceil(len(fresh))
+            blk = np.full(pad, self.null_block, np.int32)
+            blk[:len(fresh)] = fresh
+            vals = self.swap.read(host_slots)
+            vals_p = np.zeros((vals.shape[0], vals.shape[1], pad)
+                              + vals.shape[3:], vals.dtype)
+            vals_p[:, :, :len(fresh)] = vals
+            self.pages = self._scatter_pages(self.pages, blk, vals_p)
+        row = np.full(self.max_blocks, self.null_block, np.int32)
+        row[:len(table)] = table
+        pos = int(image["pos"])
+        # one fused dispatch restores all four slot arrays; the traced
+        # np.int32 index keeps it slot-agnostic in the jit cache
+        (self.tables, self.positions, self.active_mask,
+         self.logits) = self._restore_slot(
+            self.tables, self.positions, self.active_mask, self.logits,
+            np.int32(slot), row, pos, image["logits"])
+        self.pos_host[slot] = pos
+        self.active[slot] = {"req": image["req"],
+                             "generated": image["generated"],
+                             "target": image["target"], "prefix": None,
+                             "deadline": image["deadline"],
+                             "reserve_tokens": image["reserve_tokens"],
+                             "reserve_g": image["reserve_g"]}
+        self.swap.drop(rid, self.allocator)
+        del self._swapped[rid]
+        self._swap_debt.discard(rid)
+        self.swap_ins += 1
+        if shadow is not None:
+            shadow.mark_materialized(slot)
+            shadow.on_swap_in(rid)
+        self.swap_in_s += time.perf_counter() - t0
+
+    def _try_resume(self, rid: int) -> bool:
+        """Resume ``rid`` if device blocks can be found: escalate through
+        the same non-destructive pressure valves as ``_grow`` (cold radix
+        leaves, then the tier's own device holds) before giving up."""
+        image = self._swapped[rid]
+        while True:
+            shared, host_slots = self.swap.split_resident(rid)
+            if len(host_slots) <= len(self.allocator.free):
+                self._swap_in(rid, image, shared, host_slots)
+                return True
+            if self.prefix_cache is not None \
+                    and self.prefix_cache.evict_until(len(host_slots)):
+                continue
+            if self.swap.release_device_holds(self.allocator):
+                continue   # holds freed; re-split (shared prefix shrank)
+            return False
+
+    def _resume_swapped(self) -> int:
+        """Swap suspended requests back in, oldest first, while slots and
+        blocks allow — called at the admission seams (``join`` /
+        ``join_many``) and the window prologue, so resumes ride the same
+        path as fresh admissions but at *higher* priority.  FIFO is
+        strict: if the oldest image cannot resume, younger ones wait (no
+        starvation).  A ``swap_stall`` fault refuses attempts."""
+        if self.swap is None or not self._swapped:
+            return 0
+        self._flush_publishes()   # resume may evict radix leaves below
+        n = 0
+        for rid in list(self._swapped):
+            if None not in self.active:
+                break
+            if self.faults is not None and self.faults.swap_stalled():
+                break
+            if not self._try_resume(rid):
+                break
+            n += 1
+        return n
+
+    def _drop_swapped(self, rid: int, reason: str) -> Request:
+        """Give up on a suspended image: typed shed, host slots freed."""
+        image = self._swapped.pop(rid)
+        self._flush_publishes()   # drop may free tier-held device blocks
+        self.swap.drop(rid, self.allocator)
+        shadow = getattr(self.allocator, "_shadow", None)
+        if shadow is not None:
+            shadow.on_swap_in(rid)
+        self.shed_log.append(Shed(image["req"], reason, self.clock))
+        return image["req"]
+
+    def shed_oldest_swapped(self) -> Optional[Request]:
+        """Driver stall escape: shed the oldest suspended image with
+        reason ``swapped_timeout`` (a wedged pool must degrade into a
+        typed shed, never a hang)."""
+        if not self._swapped:
+            return None
+        return self._drop_swapped(next(iter(self._swapped)),
+                                  "swapped_timeout")
+
+    def _expire_swapped(self) -> None:
+        """Deadline sweep for suspended images (the §14 sweep only sees
+        active slots): an image past its deadline sheds with
+        ``swapped_timeout`` — suspended, never resumed in time."""
+        if self.swap is None or not self._swapped:
+            return
+        for rid in list(self._swapped):
+            image = self._swapped[rid]
+            if image["deadline"] is None or self.clock < image["deadline"]:
+                continue
+            self._drop_swapped(rid, "swapped_timeout")
+            self.deadline_misses += 1
+
     def _grow(self, slot: int,
               evicted: List[Request]) -> List[Tuple[int, int]]:
         """Ensure slot can hold pos_host[slot]+1 tokens AND privately
@@ -981,13 +1251,24 @@ class PagedContinuousEngine:
                 f"{self.allocator.blocks_needed(need)}-block KV")
         had = len(self.allocator.tables.get(slot, ()))
         while not self.allocator.can_allocate(slot, need):
-            # cold cached prefixes go first: reclaiming an unpinned
-            # prefix entry costs a future re-prefill, evicting a live
-            # request costs a restart-from-scratch
+            # victim policy (§15): non-destructive valves first.
+            # 1. the swap tier's own device holds — free to drop, the
+            #    host copies remain authoritative;
+            # 2. cold cached radix leaves — reclaiming costs a future
+            #    re-prefill for NEW requests only;
+            # 3. suspend a live request to the host tier — bounded added
+            #    latency, zero recompute;
+            # 4. destructive evict-and-requeue — last resort (tier off,
+            #    tier full, or nothing swappable).
             missing = (self.allocator.blocks_needed(need)
                        - len(self.allocator.tables.get(slot, ())))
+            if self.swap is not None \
+                    and self.swap.release_device_holds(self.allocator):
+                continue
             if self.prefix_cache is not None \
                     and self.prefix_cache.evict_until(missing):
+                continue
+            if self.swap is not None and self._swap_out_victim(exclude=slot):
                 continue
             victim = self._pick_victim(exclude=slot)
             if victim is None:
@@ -1016,8 +1297,18 @@ class PagedContinuousEngine:
         for idx in range(start, len(table)):
             while self.allocator.refcount.get(table[idx], 0) > 1 \
                     and not self.allocator.free:
+                # same §15 valve order as the grow loop above; dropping a
+                # tier hold on THIS block can also make the clone
+                # unnecessary (refcount falls to 1), which the loop
+                # re-checks
+                if self.swap is not None \
+                        and self.swap.release_device_holds(self.allocator):
+                    continue
                 if self.prefix_cache is not None \
                         and self.prefix_cache.evict_until(1):
+                    continue
+                if self.swap is not None \
+                        and self._swap_out_victim(exclude=slot):
                     continue
                 victim = self._pick_victim(exclude=slot)
                 if victim is None:
@@ -1092,6 +1383,12 @@ class PagedContinuousEngine:
             if stalled:
                 self.clock += stalled
                 self.stall_ticks += stalled
+        if self.swap is not None and self._swapped:
+            # suspended images first (§15): expire the hopeless, resume
+            # whatever fits — BEFORE the idle check, or an engine whose
+            # whole active set is suspended could never wake up
+            self._expire_swapped()
+            self._resume_swapped()
         if not any(a is not None for a in self.active):
             return [], [], 0
         # deferred radix publishes land here — between admission waves,
@@ -1302,6 +1599,31 @@ class PagedContinuousEngine:
                 nulls = np.full(k, self.null_block, np.int32)
                 self.pages = self._copy_pages(self.pages, nulls, nulls)
                 k <<= 1
+        if self.swap is not None:
+            # §15 swap transfers: gather/scatter at every power-of-two
+            # block count an image can pad to, plus the resume path's
+            # eager per-slot restores — a mid-storm suspension must not
+            # compile anything
+            pool = self.pages["k"]
+            k = 1
+            while k <= _pow2_ceil(self.max_blocks):
+                blk = np.full(k, self.null_block, np.int32)
+                self._gather_pages(self.pages, blk)
+                vals = np.zeros((len(self.pages), pool.shape[0], k)
+                                + tuple(pool.shape[2:]), pool.dtype)
+                self.pages = self._scatter_pages(self.pages, blk, vals)
+                k <<= 1
+            # the fused slot restore _swap_in issues and the logits-row
+            # readback _swap_out issues (np.int32-indexed: one compile
+            # covers every slot at runtime).  The restore runs against
+            # sacrificial copies — its arguments are donated
+            s0 = np.int32(0)
+            self.logits[s0]
+            self._restore_slot(
+                jnp.array(self.tables), jnp.array(self.positions),
+                jnp.array(self.active_mask), jnp.array(self.logits),
+                s0, np.full(self.max_blocks, self.null_block, np.int32),
+                0, np.zeros(self.logits.shape[1], self.logits.dtype))
         for k in windows:
             # pages are donated-and-reassigned (dropping them would delete
             # the live pool); logits/positions/tokens are discarded — an
@@ -1375,9 +1697,10 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
         while len(pending) > queue_cap:
             _shed(pending.pop(), "queue_full")
     util: List[float] = []
-    while (pending or engine.num_active
+    while (pending or engine.num_active or engine.num_suspended
            or (backlog() if backlog is not None else False)) \
             and steps < max_steps:
+        swap_ins0 = engine.swap_ins
         admitted = 0
         while True:
             n = engine.join_many(pending)
@@ -1393,7 +1716,7 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
             if queue_cap is not None:
                 while len(pending) > queue_cap:
                     _shed(pending.pop(), "queue_full")
-        if not (pending or engine.num_active
+        if not (pending or engine.num_active or engine.num_suspended
                 or (backlog() if backlog is not None else False)):
             break
         peak = max(peak, engine.num_active)
@@ -1430,17 +1753,24 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
                         for i in range(1, k))
         util.append(engine.utilization())
         steps += max(k, 1)
-        # progress = admissions or finishes; eviction churn and stalled
-        # windows are not progress.  A long decode stretch still counts k
-        # steps toward max_steps, so stall-shedding only fires when the
-        # queue head can never fit (e.g. a fault-shrunk pool)
-        if admitted or finished:
+        # progress = admissions, finishes or swap-ins (a resume decodes
+        # real tokens next window); eviction churn and stalled windows are
+        # not progress.  A long decode stretch still counts k steps toward
+        # max_steps, so stall-shedding only fires when the queue head can
+        # never fit (e.g. a fault-shrunk pool)
+        if admitted or finished or engine.swap_ins > swap_ins0:
             no_progress = 0
         elif not engine.num_active:
             no_progress += 1
-            if no_progress >= stall_limit and pending:
-                _shed(pending.popleft(), "admission_stalled")
-                no_progress = 0
+            if no_progress >= stall_limit:
+                if pending:
+                    _shed(pending.popleft(), "admission_stalled")
+                    no_progress = 0
+                elif engine.num_suspended:
+                    # a wedged pool with only suspended images left must
+                    # degrade into a typed shed, never a hang (§15)
+                    engine.shed_oldest_swapped()
+                    no_progress = 0
     shed = list(engine.shed_log[shed0:])
     return {"served": served, "steps": steps, "peak": peak,
             "evictions": evictions, "util": util,
@@ -1450,4 +1780,7 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
             "deadline_misses": engine.deadline_misses,
             "quarantined": engine.quarantined,
             "requeue_prefix_hits": engine.requeue_prefix_hits,
-            "retries_max": max(engine.retries.values(), default=0)}
+            "retries_max": max(engine.retries.values(), default=0),
+            "swap_outs": engine.swap_outs,
+            "swap_ins": engine.swap_ins,
+            "reprefilled_swapped_tokens": engine.reprefilled_swapped_tokens}

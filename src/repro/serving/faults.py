@@ -31,6 +31,16 @@ Fault kinds (each a :class:`FaultEvent` on the plan):
     shadow-allocator path: with ``REPRO_SANITIZE=1`` the shadow raises
     ``SharedWriteError`` (the corruption is *blocked* and counted);
     without the shadow the probe is a recorded no-op.
+``swap_stall``
+    Delay host-tier transfers: the next ``ticks`` swap-in attempts are
+    refused (the transfer "has not completed"), so suspended requests
+    stay resident on host and resume later — streams must still be
+    bit-exact, only latency may grow (DESIGN.md §15).
+``host_pressure``
+    Shrink the host swap tier by ``blocks`` page slots — swap-outs that
+    no longer fit must fall back to the destructive evict path, never
+    corrupt a suspended image.  A second event with ``blocks<=0``
+    restores the original capacity.
 
 The injector is zero-cost when absent: the engine checks
 ``self.faults is not None`` exactly like the sanitizer checks
@@ -47,6 +57,10 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 from repro.analysis.sanitizer import SharedWriteError
+from repro.core.types import SHED_REASONS, ShedReason
+
+__all__ = ["FAULT_SEQ", "KINDS", "SHED_REASONS", "ShedReason",
+           "FaultEvent", "Shed", "FaultInjector"]
 
 #: allocator seq_id owning fault-held (shrunk-pool) blocks; distinct from
 #: serving.paged_cache.NULL_SEQ (-1) so drain checks can tell a leaked
@@ -54,11 +68,7 @@ from repro.analysis.sanitizer import SharedWriteError
 FAULT_SEQ = -2
 
 KINDS = ("pool_shrink", "pool_restore", "predict_skew", "poison_logits",
-         "stall", "radix_corrupt")
-
-#: typed load-shed reasons drivers may emit (``Shed.reason``)
-SHED_REASONS = ("deadline", "retry_budget", "queue_full",
-                "admission_stalled", "oom")
+         "stall", "radix_corrupt", "swap_stall", "host_pressure")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +132,9 @@ class FaultInjector:
         self.stalled_ticks = 0
         self.radix_corruptions_blocked = 0
         self.radix_probes_unchecked = 0
+        self.swap_stalls = 0
+        self._swap_stall_budget = 0
+        self.host_pressure_events = 0
 
     # -- admission seam ------------------------------------------------------
 
@@ -164,7 +177,33 @@ class FaultInjector:
                 self.stalled_ticks += ev.ticks
             elif ev.kind == "radix_corrupt":
                 self._radix_corrupt(engine)
+            elif ev.kind == "swap_stall":
+                self._swap_stall_budget += ev.ticks
+            elif ev.kind == "host_pressure":
+                self._host_pressure(engine, ev.blocks)
         return stall
+
+    # -- swap-tier seams -----------------------------------------------------
+
+    def swap_stalled(self) -> bool:
+        """The engine asks before every swap-in attempt: while the stall
+        budget set by a ``swap_stall`` event lasts, the transfer is refused
+        (and the attempt consumes one budget tick)."""
+        if self._swap_stall_budget <= 0:
+            return False
+        self._swap_stall_budget -= 1
+        self.swap_stalls += 1
+        return True
+
+    def _host_pressure(self, engine, blocks: int) -> None:
+        tier = getattr(engine, "swap", None)
+        if tier is None:
+            return                      # no swap tier configured; no-op
+        if blocks > 0:
+            tier.shrink(blocks)
+        else:
+            tier.restore()
+        self.host_pressure_events += 1
 
     def _shrink(self, allocator, blocks: int) -> None:
         n = min(blocks, len(allocator.free))
@@ -222,4 +261,6 @@ class FaultInjector:
                 "poisoned": self.poisoned,
                 "stalled_ticks": self.stalled_ticks,
                 "radix_corruptions_blocked": self.radix_corruptions_blocked,
-                "radix_probes_unchecked": self.radix_probes_unchecked}
+                "radix_probes_unchecked": self.radix_probes_unchecked,
+                "swap_stalls": self.swap_stalls,
+                "host_pressure_events": self.host_pressure_events}

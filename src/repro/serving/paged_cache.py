@@ -30,6 +30,8 @@ import heapq
 import math
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.analysis import sanitizer as _san
 from repro.configs.base import ModelConfig
 from repro.core.types import Batch, Request
@@ -535,6 +537,193 @@ def _lcp(a: Sequence[int], b: Sequence[int]) -> int:
             break
         n += 1
     return n
+
+
+class HostSwapTier:
+    """Host-memory page store backing non-destructive preemption
+    (DESIGN.md §15).
+
+    The device pool is tier 0; this is tier 1: a pinned numpy array of
+    page slots shaped like the device pools' page axis, stacked over the
+    pools (``[P, L, slots, block_tokens, Hkv, D]``, P = len(pools) in
+    sorted key order).  When the engine suspends a request it copies the
+    request's pages here, frees its device blocks, and records a
+    **per-sequence swap map** (host slot per table position) so the
+    request can later resume bit-exactly with zero re-prefilled tokens.
+
+    Refcount/COW awareness — shared radix blocks swap **once**:
+
+    * ``by_block`` deduplicates: a device block whose contents are
+      already host-resident (published prefix shared by two suspended
+      requests) gets no second copy, only a slot reference.
+    * For every copied block that is *still live* after the owner's
+      ``free_seq`` (the radix cache or a sibling holds it), the tier
+      retains one allocator reference under ``SWAP_HOLDER``.  The hold
+      certifies the device copy immutable (refcount ≥ 2 means
+      ``cow_if_not_appendable`` clones before any append), so a resume
+      may ``share`` it instead of scattering from host — and the
+      sanitizer raises on any write into it.  Under pool pressure
+      :meth:`release_device_holds` drops every hold (the host copies
+      remain authoritative), trading resume bandwidth for free blocks.
+
+    ``host_pressure`` faults :meth:`shrink` the soft ``capacity`` below
+    ``num_slots``; :meth:`can_hold` then refuses new swap-outs (the
+    engine falls back to destructive eviction) without ever touching
+    resident images.
+
+    >>> a = BlockAllocator(num_blocks=4, block_tokens=2)
+    >>> tier = HostSwapTier(num_slots=4)
+    >>> table = list(a.allocate(0, 4))
+    >>> fresh = tier.fresh_blocks(table); fresh == table
+    True
+    >>> vals = np.arange(8, dtype=np.float32).reshape(2, 1, 2, 2, 1, 1)
+    >>> a.free_seq(0)
+    >>> tier.swap_out(7, table, fresh, vals, a)
+    >>> tier.split_resident(7)          # nothing shareable on device
+    ([], [0, 1])
+    >>> bool((tier.read([0, 1]) == vals).all())
+    True
+    >>> tier.drop(7, a); tier.empty
+    True
+    """
+
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.capacity = num_slots            # soft cap (host_pressure)
+        # pop() yields ascending slot ids — deterministic placement
+        self.free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._store: Optional[np.ndarray] = None
+        self.slot_ref: Dict[int, int] = {}   # host slot -> #maps using it
+        self.by_block: Dict[int, int] = {}   # held device block -> slot
+        self.slot_block: Dict[int, int] = {} # inverse of by_block
+        self.maps: Dict[object, List[int]] = {}  # key -> slot per position
+        self.copied_slots = 0
+        self.deduped_blocks = 0
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def used_slots(self) -> int:
+        return self.num_slots - len(self.free)
+
+    def can_hold(self, n_fresh: int) -> bool:
+        """Room for ``n_fresh`` new page copies under the soft capacity?"""
+        return (n_fresh <= len(self.free)
+                and self.used_slots + n_fresh <= self.capacity)
+
+    def shrink(self, n_slots: int) -> None:
+        """Lower the soft capacity (``host_pressure`` fault): future
+        swap-outs see a smaller tier; resident images are untouched."""
+        self.capacity = max(0, self.capacity - n_slots)
+
+    def restore(self) -> None:
+        self.capacity = self.num_slots
+
+    @property
+    def empty(self) -> bool:
+        return (not self.maps and not self.slot_ref and not self.by_block
+                and self.used_slots == 0)
+
+    def device_holds(self) -> List[int]:
+        """Device blocks the tier keeps alive under ``SWAP_HOLDER`` (the
+        drain check's second 'legitimate survivor' set)."""
+        return list(self.by_block)
+
+    # -- swap-out ------------------------------------------------------------
+
+    def fresh_blocks(self, table: Sequence[int]) -> List[int]:
+        """The subset of ``table`` needing a host copy — blocks already
+        host-resident (``by_block``) are deduplicated to a reference."""
+        return [b for b in table if b not in self.by_block]
+
+    def _ensure_store(self, values: np.ndarray) -> np.ndarray:
+        if self._store is None:
+            shape = (values.shape[0], values.shape[1],
+                     self.num_slots) + values.shape[3:]
+            self._store = np.zeros(shape, values.dtype)
+        return self._store
+
+    def swap_out(self, key, table: Sequence[int], fresh: Sequence[int],
+                 values: Optional[np.ndarray], allocator) -> None:
+        """Suspend ``key``'s pages: ``values[:, :, i]`` is the page of
+        ``fresh[i]`` (caller gathered them **before** freeing the seq);
+        dedup hits take slot references only.  Must run *after* the
+        engine's ``free_seq`` so still-live fresh blocks (cache/sibling
+        holders survive the free) can be identified and retained under
+        ``SWAP_HOLDER``."""
+        if key in self.maps:
+            raise ValueError(f"key {key!r} is already swapped out")
+        fresh_slot: Dict[int, int] = {}
+        for i, b in enumerate(fresh):
+            s = self.free.pop()
+            fresh_slot[b] = s
+            self._ensure_store(values)[:, :, s] = values[:, :, i]
+            self.copied_slots += 1
+            if allocator.refcount.get(b, 0) > 0:
+                allocator.retain([b], holder=_san.SWAP_HOLDER)
+                self.by_block[b] = s
+                self.slot_block[s] = b
+        seq_map: List[int] = []
+        for b in table:
+            if b in fresh_slot:
+                s = fresh_slot[b]
+            else:                        # dedup: already host-resident
+                s = self.by_block[b]
+                self.deduped_blocks += 1
+            self.slot_ref[s] = self.slot_ref.get(s, 0) + 1
+            seq_map.append(s)
+        self.maps[key] = seq_map
+
+    # -- swap-in -------------------------------------------------------------
+
+    def split_resident(self, key) -> Tuple[List[int], List[int]]:
+        """Partition ``key``'s map into a device-shareable prefix (blocks
+        the tier still holds — immutable, so a resume can ``share`` them)
+        and the host slots whose pages must be scattered back."""
+        seq_map = self.maps[key]
+        shared: List[int] = []
+        for s in seq_map:
+            b = self.slot_block.get(s)
+            if b is None:
+                break
+            shared.append(b)
+        return shared, seq_map[len(shared):]
+
+    def read(self, slots: Sequence[int]) -> np.ndarray:
+        """Page contents for ``slots`` (``[P, L, len(slots), ...]``)."""
+        return self._store[:, :, list(slots)]
+
+    def drop(self, key, allocator) -> None:
+        """Forget ``key``'s image (resumed or shed): slot references are
+        released; a slot with no remaining references frees, and its
+        device hold (if any) is released back to the allocator."""
+        for s in self.maps.pop(key):
+            n = self.slot_ref[s] - 1
+            if n > 0:
+                self.slot_ref[s] = n
+                continue
+            del self.slot_ref[s]
+            self.free.append(s)
+            b = self.slot_block.pop(s, None)
+            if b is not None:
+                del self.by_block[b]
+                allocator.release([b], holder=_san.SWAP_HOLDER)
+
+    # -- pressure escape hatch -----------------------------------------------
+
+    def release_device_holds(self, allocator) -> bool:
+        """Drop every ``SWAP_HOLDER`` reference (the cheapest pressure
+        valve: nothing is lost — host copies remain authoritative and
+        resumes fall back to scattering).  Returns whether any device
+        block actually freed."""
+        if not self.slot_block:
+            return False
+        before = len(allocator.free)
+        for s, b in list(self.slot_block.items()):
+            allocator.release([b], holder=_san.SWAP_HOLDER)
+        self.slot_block.clear()
+        self.by_block.clear()
+        return len(allocator.free) > before
 
 
 class MispredictionEWMA:

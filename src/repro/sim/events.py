@@ -22,7 +22,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.magnus import MagnusService
-from repro.core.types import Batch, Request
+from repro.core.types import SHED_REASONS, Batch, Request
 from repro.serving.cost_model import CostModel
 
 
@@ -42,6 +42,22 @@ class Metrics:
     deadline_misses: int = 0
     quarantined: int = 0
     retries: int = 0
+    #: per-reason shed breakdown, keyed by ``ShedReason`` values (§14/§15)
+    shed_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def record_shed(self, reason) -> None:
+        """Tally one shed request under its typed reason.
+
+        ``reason`` is a :class:`repro.core.types.ShedReason` (or its string
+        value) — the same enum the engine's ``Shed`` records and
+        ``drive_paged`` reports, so sim and runtime breakdowns are keyed
+        identically."""
+        value = getattr(reason, "value", reason)
+        if value not in SHED_REASONS:
+            raise ValueError(f"unknown shed reason {reason!r}; "
+                             f"expected one of {SHED_REASONS}")
+        self.shed += 1
+        self.shed_reasons[value] = self.shed_reasons.get(value, 0) + 1
 
     @property
     def request_throughput(self) -> float:
@@ -76,6 +92,7 @@ class Metrics:
             "mean_batch": round(float(np.mean(self.batch_sizes)), 2)
             if self.batch_sizes else 0.0,
             "shed": self.shed,
+            "shed_reasons": dict(self.shed_reasons),
             "deadline_misses": self.deadline_misses,
             "quarantined": self.quarantined,
             "retries": self.retries,

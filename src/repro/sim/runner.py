@@ -71,6 +71,25 @@ class HostSyncCost:
                     if self.dispatch == "fused" else self.host_sync_s)
         return self._base.decode_iter_time(n_active, ctx) + per_iter
 
+    # -- host KV swap tier (DESIGN.md §15) ----------------------------------
+    def swap_transfer_time(self, blocks: int, block_tokens: int) -> float:
+        """Price one device<->host page transfer for a ``blocks``-block
+        suspension image: a single sync latency (the engine's swap-out does
+        exactly one readback) plus the KV pages over the host link."""
+        page_bytes = (blocks * block_tokens
+                      * self._base.cfg.kv_bytes_per_token(
+                          self._base.kv_dtype_bytes))
+        return (self.host_sync_s
+                + page_bytes / (self._base.hw.chips * self._base.hw.host_bw))
+
+    def resume_cheaper(self, blocks: int, block_tokens: int,
+                       prompt_len: int) -> bool:
+        """True when swapping a victim back in beats re-prefilling it —
+        the §15 invariant the swap tier exists to buy.  Compares one
+        host->device scatter against a fresh single-row prefill."""
+        return (self.swap_transfer_time(blocks, block_tokens)
+                < self._base.prefill_time(1, max(prompt_len, 1)))
+
 
 def _estimator_bootstrap(cost: CostModel, memory: MemoryModel,
                          seed: int = 0) -> ServingTimeEstimator:

@@ -12,7 +12,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 from benchmarks.extensions import (BENCH_ENGINE_SCHEMA_VERSION,  # noqa: E402
                                    chaos_storm, engine_perf,
-                                   prefix_cache_sweep, radix_prefix_sweep)
+                                   prefix_cache_sweep, radix_prefix_sweep,
+                                   swap_storm)
 
 ENGINE_KEYS = {"decode_steps", "tokens", "wall_s", "steps_per_s",
                "tokens_per_s", "host_syncs", "host_syncs_per_token"}
@@ -32,6 +33,12 @@ STORM_KEYS = {"completed", "shed", "deadline_misses", "quarantined",
               "evictions", "retries_max", "hung", "accounted",
               "bitexact_survivors", "stranded_blocks", "drained",
               "faults", "wall_s"}
+SWAP_KEYS = {"completed", "shed", "evictions", "swap_outs", "swap_ins",
+             "swapped_blocks", "swap_reused_blocks",
+             "reprefilled_swapped_tokens", "swap_roundtrip_bitexact",
+             "hung", "accounted", "stranded_blocks", "drained",
+             "resume_s_per_swap_in", "reprefill_s_per_request",
+             "reprefill_gen_tokens", "resume_cheaper", "faults", "wall_s"}
 
 
 @pytest.fixture(scope="module")
@@ -44,6 +51,7 @@ def bench_doc(tmp_path_factory):
     radix_prefix_sweep(n_requests=4, head_words=20, tail_words=10,
                        input_words=5, gen_length=2, out_path=str(out))
     chaos_storm(n_requests=4, max_gen=8, out_path=str(out))
+    swap_storm(n_requests=6, out_path=str(out))
     return json.loads(out.read_text())
 
 
@@ -163,6 +171,30 @@ def test_bench_chaos_section(bench_doc):
     # sibling sections survived the merge
     assert set(bench_doc["engines"]) == ENGINES
     assert "prefix_cache" in bench_doc and "radix_prefix" in bench_doc
+
+
+def test_bench_swap_section(bench_doc):
+    """Schema v6: the swap section records the §15 suspension contract
+    as exact-int indicators — the values scripts/check_bench.py floors
+    pin.  Only count indicators are asserted here (wall-time-derived
+    ``resume_cheaper`` is pinned on the committed doc by check_bench,
+    not re-measured on shared CI runners)."""
+    s = bench_doc["swap"]["storm"]
+    assert set(s) == SWAP_KEYS
+    assert s["swap_outs"] > 0 and s["swap_ins"] > 0, \
+        "a storm that never swapped proves nothing"
+    assert s["reprefilled_swapped_tokens"] == 0
+    assert s["swap_roundtrip_bitexact"] == 1
+    assert s["hung"] == 0
+    assert s["accounted"] == 1
+    assert s["stranded_blocks"] == 0 and s["drained"] == 1
+    assert s["faults"]["fired"] > 0
+    for k in ("arch", "n_requests", "max_gen", "num_blocks",
+              "swap_blocks"):
+        assert k in bench_doc["swap"]["config"], k
+    # sibling sections survived the merge
+    assert set(bench_doc["engines"]) == ENGINES
+    assert "chaos" in bench_doc
 
 
 def test_bench_engine_sync_accounting(bench_doc):

@@ -61,7 +61,8 @@ def test_counted_sync_sites_cover_engine_counters():
     sites = hotlint.collect_sync_sites([str(ROOT / "src" / "repro")])
     assert sites == {("engine.py", "serve_batch"),
                      ("engine.py", "step"),
-                     ("engine.py", "step_window")}
+                     ("engine.py", "step_window"),
+                     ("engine.py", "_swap_out")}
 
 
 def test_cli_exit_codes(tmp_path, monkeypatch):

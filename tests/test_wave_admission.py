@@ -218,6 +218,59 @@ def test_byte_identical_retry_prefills_one_token(params):
     assert eng.generated[req[0].req_id] == first_stream
 
 
+def test_ordered_queue_drops_dispatch_count(params):
+    """Satellite of §15: ``order_admission_queue`` groups same-radix-chain
+    requests into one admission wave and coalesces same-bucket suffixes,
+    so slot-limited serving pays strictly fewer prefill dispatches than
+    the interleaved arrival order — with identical streams."""
+    from repro.core.batcher import order_admission_queue
+
+    # two templates far apart in prompt AND suffix size, so interleaved
+    # waves straddle suffix buckets that grouped waves never mix
+    a = _reqs(3, n_apps=1, instr_words=19, input_words=4, seed=41)
+    b = _reqs(3, n_apps=1, instr_words=9, input_words=24, seed=43)
+    scrambled = [a[0], b[0], a[1], b[1], a[2], b[2]]
+    ordered = order_admission_queue(copy.deepcopy(scrambled), block_tokens=4)
+    assert [r.instruction for r in ordered] == \
+        [r.instruction for r in a + b], "chains must group, arrival-stably"
+
+    def run(reqs):
+        eng = _engine(params, bt=4, slots=3, blocks=192)
+        for i in range(0, len(reqs), 3):       # slot-limited waves of 3
+            wave = copy.deepcopy(reqs[i:i + 3])
+            assert eng.join_many(wave) == len(wave)
+            _drain(eng)
+        streams = {r.req_id: eng.generated[r.req_id] for r in reqs}
+        return eng.prefill_dispatches, streams
+
+    d_scrambled, s_scrambled = run(scrambled)
+    d_ordered, s_ordered = run(ordered)
+    assert d_ordered < d_scrambled, (d_ordered, d_scrambled)
+    assert {r.req_id for r in scrambled} == set(s_scrambled)
+    assert s_ordered == s_scrambled, "ordering must never change tokens"
+
+
+def test_batcher_pop_applies_radix_order():
+    """``AdaptiveBatcher.pop`` reorders a dispatched batch in place when
+    ``radix_aware`` is set — the engine-facing hook for the ordering."""
+    from repro.core.batcher import AdaptiveBatcher, BatcherConfig
+    from repro.core.types import Batch, Request
+    from repro.core.wma import MemoryModel
+
+    reqs = [Request(app=f"t{i % 2}", task="t", instruction=f"instr {i % 2}",
+                    user_input=f"input {i}", length=8 + i, gen_length=2)
+            for i in range(4)]
+    batcher = AdaptiveBatcher(MemoryModel(CFG, hbm_bytes=2 ** 30),
+                              BatcherConfig(radix_aware=True,
+                                            block_tokens=4))
+    batch = Batch(requests=list(reqs), created_time=0.0)
+    batcher.queue.append(batch)
+    batcher.pop(batch)
+    assert [r.instruction for r in batch.requests] == \
+        ["instr 0", "instr 0", "instr 1", "instr 1"]
+    assert batch.requests[0] is reqs[0] and batch.requests[1] is reqs[2]
+
+
 def test_retry_wave_streams_match_cache_off(params):
     """Retry storms through the radix engine generate the same tokens
     the cache-off engine does — dedup changes where prompt KV comes
