@@ -56,6 +56,12 @@ SUITES = {
     # BENCH_engine.json
     "swap": lambda fast: E.swap_storm(
         n_requests=6 if fast else 8),
+    # §16 speculative-decoding contract: self-draft spec engine vs the
+    # spec-off fused engine (acceptance, accepted tokens per target
+    # dispatch, bit-exactness); merges the spec_decode section (schema
+    # v7) into BENCH_engine.json
+    "spec": lambda fast: E.spec_decode_bench(
+        max_gen=15 if fast else 30, repeats=2 if fast else 3),
 }
 
 

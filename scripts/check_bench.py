@@ -30,6 +30,10 @@ acceptance criteria of the PRs that shipped them:
   storm round-trips victims through the host swap tier with ZERO
   re-prefilled tokens, bit-exact resumed streams, and a measured
   swap-in cost below the recompute cost of a destroyed victim
+- ISSUE 9: the speculative-decoding contract (DESIGN.md §16) — every
+  verify dispatch emits at least one token (self-draft pins
+  accepted-per-dispatch at draft_k+1) and speculation never changes
+  greedy output (``bit_exact`` vs the spec-off fused engine)
 """
 from __future__ import annotations
 
@@ -70,9 +74,11 @@ FLOORS = [
     (("swap", "storm", "drained"), 1, "exact"),
     (("swap", "storm", "accounted"), 1, "exact"),
     (("swap", "storm", "resume_cheaper"), 1, "exact"),
+    (("spec_decode", "accepted_per_dispatch"), 1.0, "min"),
+    (("spec_decode", "bit_exact"), 1, "exact"),
 ]
 
-MIN_SCHEMA_VERSION = 6
+MIN_SCHEMA_VERSION = 7
 
 
 def _get(doc, path):

@@ -64,7 +64,9 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
                              max_concurrency: int = 16,
                              prefix_cache: bool = False,
                              ttl_steps: int | None = None,
-                             swap_blocks: int = 0) -> dict:
+                             swap_blocks: int = 0,
+                             spec_decode: bool = False,
+                             draft_k: int = 4) -> dict:
     """Continuous paged serving for real on CPU: MagnusService drives
     admission (prediction + block accounting) against the same
     BlockAllocator the engine stores KV pages in (DESIGN.md §8).  The
@@ -79,7 +81,10 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     sets a default per-request deadline in scheduler-clock ticks;
     ``swap_blocks`` > 0 enables the host-memory KV swap tier (§15), so
     pool pressure suspends victims to pinned host pages instead of
-    destroying their KV."""
+    destroying their KV; ``spec_decode`` turns on §16 speculative
+    decoding (self-draft: the draft shares the target's weights, so
+    streams stay bit-exact while every verify dispatch emits up to
+    ``draft_k + 1`` tokens)."""
     import time
 
     from repro.core.magnus import MagnusConfig, MagnusService
@@ -105,7 +110,9 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
                                    prefix_cache=svc.prefix_cache or False,
                                    mispredict=ewma,
                                    default_ttl=ttl_steps,
-                                   swap_blocks=swap_blocks)
+                                   swap_blocks=swap_blocks,
+                                   spec_decode=spec_decode,
+                                   draft_k=draft_k)
     wl = poisson_workload(rate, duration, seed=seed, max_len=200, max_gen=32)
     for r in wl:
         svc.on_request(r, r.arrival_time)   # prediction + Algorithm-1 acct
@@ -153,6 +160,12 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
             "swap_reused_blocks": engine.swap_reused_blocks,
             "reprefilled_swapped_tokens": st["reprefilled_swapped_tokens"],
             "swap_in_s": round(engine.swap_in_s, 4),
+            # speculative decoding (DESIGN.md §16)
+            "spec_windows": st["spec_windows"],
+            "accepted_per_dispatch": round(st["accepted_per_dispatch"], 3),
+            "acceptance_rate": round(st["acceptance_rate"], 3),
+            "draft_quarantined": st["draft_quarantined"],
+            "draft_prefill_tokens": st["draft_prefill_tokens"],
             "headroom": ewma.snapshot()}
 
 
@@ -184,6 +197,15 @@ def main() -> None:
                          "in blocks (0 disables); under pool pressure live "
                          "victims suspend to pinned host pages and resume "
                          "without re-prefilling (DESIGN.md §15)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="paged engine: speculative decoding (DESIGN.md "
+                         "§16) — a self-draft proposes draft-k tokens per "
+                         "window, one batched target dispatch verifies "
+                         "them, rollback is block-table truncation; "
+                         "greedy output is bit-exact")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative tokens proposed per window (the "
+                         "verify dispatch covers draft-k + 1 positions)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -195,7 +217,9 @@ def main() -> None:
                                            block_tokens=args.block_tokens,
                                            prefix_cache=args.prefix_cache,
                                            ttl_steps=args.ttl_steps,
-                                           swap_blocks=args.swap_blocks)
+                                           swap_blocks=args.swap_blocks,
+                                           spec_decode=args.spec_decode,
+                                           draft_k=args.draft_k)
         else:
             out = run_engine_backend(args.arch, args.rate, args.duration,
                                      args.strategy, args.seed)

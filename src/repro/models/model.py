@@ -167,6 +167,37 @@ def decode_multi_paged(params, cfg: ModelConfig, pages,
         rules=rules, act_dtype=act_dtype)
 
 
+@hot_path
+def draft_window(params, cfg: ModelConfig, pages, batch: Dict[str, Any], *,
+                 num_steps: int, target_vocab: int, rules=None,
+                 act_dtype=jnp.bfloat16):
+    """Draft ``num_steps`` speculative tokens with the draft model
+    (``params``/``cfg``/``pages`` are the DRAFT side; DESIGN.md §16).
+    batch: {"target_logits": [B, target_padded_vocab], "logits": [B,
+    padded_vocab] draft carry, "positions": [B], "block_tables": [B, M]
+    draft tables, "active": [B] bool}.  Returns (draft logits, pages,
+    proposed [B, num_steps])."""
+    return transformer.draft_window(
+        params, cfg, pages, batch["target_logits"], batch["logits"],
+        batch["positions"], batch["block_tables"], batch["active"],
+        num_steps=num_steps, target_vocab=target_vocab, rules=rules,
+        act_dtype=act_dtype)
+
+
+@hot_path
+def verify_window(params, cfg: ModelConfig, pages, batch: Dict[str, Any], *,
+                  rules=None, act_dtype=jnp.bfloat16):
+    """Verify a drafted window in one batched target dispatch
+    (DESIGN.md §16).  batch: {"proposed": [B, W], "logits": [B,
+    padded_vocab] target carry, "positions": [B], "block_tables": [B, M]
+    target tables, "active": [B] bool, "max_emit": [B] per-slot emit
+    budget}.  Returns (logits, pages, positions, packed [B, W+1])."""
+    return transformer.verify_window(
+        params, cfg, pages, batch["proposed"], batch["logits"],
+        batch["positions"], batch["block_tables"], batch["active"],
+        batch["max_emit"], rules=rules, act_dtype=act_dtype)
+
+
 def write_prefill_pages(pages, kv, table):
     return transformer.write_prefill_pages(pages, kv, table)
 

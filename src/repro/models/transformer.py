@@ -734,6 +734,112 @@ def decode_multi_paged(params, cfg: ModelConfig, pages, logits, positions,
     return logits, pages, positions, jnp.swapaxes(toks, 0, 1)
 
 
+def draft_window(params, cfg: ModelConfig, pages, target_logits, logits,
+                 positions, block_tables, active, *, num_steps: int,
+                 target_vocab: int, rules=None, act_dtype=jnp.bfloat16):
+    """Draft ``num_steps`` speculative tokens per slot (DESIGN.md §16).
+
+    Runs the *draft* model's fused paged decode over its own pools.  The
+    first consumed token is forced to the target's greedy pick (argmax of
+    ``target_logits[:, :target_vocab]``) — it is already verified, being
+    the target's own next token — and the remaining ``num_steps - 1``
+    come from the draft's carried logits.  The proposed window
+    ``[t1, d1, .., d_{k}]`` (``num_steps = k + 1``) never leaves the
+    device; :func:`verify_window` consumes it in place.
+
+    ``target_vocab`` is static: the draft and target configs must share a
+    token id space but may pad their vocabs differently.  Inactive slots
+    keep positions frozen and decode into the null block, exactly like
+    :func:`decode_multi_paged`.
+
+    Returns ``(draft_logits, pages, proposed [B, num_steps])``.  The
+    draft's position advance is discarded by the caller — verification's
+    emitted count governs both pools' shared positions."""
+    inc = active.astype(positions.dtype)
+    t1 = jnp.argmax(target_logits[:, :target_vocab],
+                    axis=-1).astype(jnp.int32)
+
+    def body(carry, i):
+        dlogits, pages, positions = carry
+        dtok = jnp.argmax(dlogits[:, :cfg.vocab_size],
+                          axis=-1).astype(jnp.int32)
+        tok = jnp.where(i == 0, t1, dtok)
+        dlogits, pages = decode_step_paged(
+            params, cfg, pages, tok, positions, block_tables,
+            rules=rules, act_dtype=act_dtype)
+        return (dlogits, pages, positions + inc), tok
+
+    (dlogits, pages, _), toks = jax.lax.scan(
+        body, (logits, pages, positions), jnp.arange(num_steps))
+    return dlogits, pages, jnp.swapaxes(toks, 0, 1)
+
+
+def verify_window(params, cfg: ModelConfig, pages, proposed, logits,
+                  positions, block_tables, active, max_emit, *, rules=None,
+                  act_dtype=jnp.bfloat16):
+    """Verify a drafted window in ONE batched target dispatch
+    (DESIGN.md §16).
+
+    ``proposed`` is ``[B, W]`` (``W = draft_k + 1``): the already-verified
+    target token ``t1`` followed by the draft's ``k`` guesses.  The whole
+    window runs through the *prefix-prefill* path — causal attention over
+    (gathered prefix pages at ``positions`` ‖ in-flight window K/V) — so
+    ``all_logits[b, i]`` equals what sequential decode would produce after
+    consuming ``proposed[b, i]``.  Draft token ``d_{i+1}`` is accepted iff
+    it matches the target's greedy pick at the previous slot; the emitted
+    count per slot is ``1 + longest agreeing prefix``, clamped to
+    ``max_emit`` (host-computed per-slot budget: tokens to finish,
+    ``max_steps``).  On rejection no correction token is emitted — the
+    carried logits at the last accepted slot produce it as the NEXT
+    window's forced ``t1``, which keeps the emitted stream bit-identical
+    to plain greedy decode.
+
+    KV for all W positions is scattered (rejected tails are reclaimed by
+    block-table truncation + position rewind on the host; stale slots
+    within kept blocks are overwritten before ever being attended).
+
+    Returns ``(logits, pages, positions, packed [B, W+1])`` where
+    ``packed = concat(proposed, emitted[:, None])`` — the window's single
+    host readback."""
+    params = cast_params(params, act_dtype)
+    b, w = proposed.shape
+    x = _embed_in(params, cfg, proposed, None, act_dtype)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"), rules)
+    suffix_lens = jnp.full((b,), w, jnp.int32)
+
+    def body(h, xs):
+        bp, page_l = xs
+        hh = rms_norm(h, bp["norm1"], cfg.norm_eps)
+        y, kv = _attention_prefill_suffix(
+            bp["attn"], hh, cfg, page_l["k"], page_l["v"], block_tables,
+            positions, suffix_lens)
+        h = h + y
+        h, _ = _ffn(bp, h, cfg, rules)
+        h = constrain(h, ("act_batch", "act_seq", "act_embed"), rules)
+        return h, kv
+
+    x, kv = jax.lax.scan(body, x, (params["blocks"], pages))
+    all_logits = _logits(params, cfg, x, rules)          # [B, W, Vp]
+    pages = write_suffix_pages_batched(
+        pages, kv, block_tables, positions,
+        jnp.where(active, w, 0).astype(jnp.int32))
+    greedy = jnp.argmax(all_logits[:, :, :cfg.vocab_size],
+                        axis=-1).astype(jnp.int32)
+    match = (proposed[:, 1:] == greedy[:, :-1]).astype(jnp.int32)
+    agree = jnp.cumprod(match, axis=1).sum(axis=1)       # longest prefix
+    emitted = jnp.minimum(agree + 1, max_emit)
+    emitted = jnp.where(active, emitted, 0).astype(positions.dtype)
+    new_positions = positions + emitted
+    idx = jnp.maximum(emitted - 1, 0).astype(jnp.int32)
+    carry = jnp.take_along_axis(all_logits, idx[:, None, None],
+                                axis=1)[:, 0]
+    new_logits = jnp.where(active[:, None], carry.astype(logits.dtype),
+                           logits)
+    packed = jnp.concatenate(
+        [proposed, emitted[:, None].astype(jnp.int32)], axis=1)
+    return new_logits, pages, new_positions, packed
+
+
 def write_prefill_pages_batched(pages, kv, tables, *, null_block: int = 0,
                                 pad_to: int = 0) -> Dict[str, jax.Array]:
     """Scatter a batched dense prefill cache (k, v each [L, B, S, Hkv, D])

@@ -177,6 +177,18 @@ def _jitted(cfg: ModelConfig, dtype):
         "restore_slot": jax.jit(
             _restore_slot,
             donate_argnames=("tables", "positions", "active", "logits")),
+        # §16 speculative decoding: the draft's fused k+1-step proposal
+        # scan (fetched from the DRAFT config's entry-point set) and the
+        # target's one-dispatch verification of the whole window.  Both
+        # donate their own pool only — positions/logits are carried
+        # state the engine rebinds, matching decode_multi_paged
+        "draft_window": jax.jit(
+            functools.partial(M.draft_window, cfg=cfg, act_dtype=dtype),
+            static_argnames=("num_steps", "target_vocab"),
+            donate_argnames=("pages",)),
+        "verify_window": jax.jit(
+            functools.partial(M.verify_window, cfg=cfg, act_dtype=dtype),
+            donate_argnames=("pages",)),
     }
 
 
@@ -453,7 +465,10 @@ class PagedContinuousEngine:
                  default_ttl: Optional[int] = None,
                  mispredict: Optional[MispredictionEWMA] = None,
                  nan_guard: Optional[bool] = None,
-                 swap_blocks: int = 0):
+                 swap_blocks: int = 0,
+                 spec_decode: bool = False, draft_k: int = 4,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 draft_params=None, draft_seed: int = 1):
         ok, why = M.supports_paged(cfg)
         if not ok:
             raise NotImplementedError(f"{cfg.name}: {why}")
@@ -474,7 +489,11 @@ class PagedContinuousEngine:
                                  if prefix_cache else None)
         self.bt = self.allocator.block_tokens
         self.slots = max_concurrency
-        self.max_blocks = -(-(max_len + max_gen) // self.bt)
+        # §16: a speculative window writes up to draft_k lookahead KV
+        # positions past the accepted stream before rollback truncates
+        # them — per-slot tables must cover the transient overshoot
+        self.max_blocks = -(-(max_len + max_gen
+                              + (draft_k if spec_decode else 0)) // self.bt)
         # the null block: every pad/idle table entry points here
         self.null_block = self.allocator.allocate(self._NULL_SEQ, 1)[0]
         self.params = params if params is not None else M.init_params(
@@ -544,6 +563,62 @@ class PagedContinuousEngine:
         self.reprefilled_swapped_tokens = 0
         self.swapped_ctx_tokens = 0    # context length at each suspension
         self.swap_in_s = 0.0           # wall time inside _swap_in
+        # -- speculative decoding (DESIGN.md §16) ------------------------
+        # a draft model proposes draft_k tokens per window from its own
+        # paged pool carved out of the SAME BlockAllocator (one physical
+        # budget, so admission, grow and the §13/§15 pressure valves see
+        # draft footprint exactly like target footprint); the target
+        # verifies all k+1 positions in one dispatch and the longest
+        # agreeing prefix is accepted on-device — host syncs stay at one
+        # per window
+        self.spec_decode = bool(spec_decode)
+        self.draft_k = int(draft_k)
+        self.spec_w = self.draft_k + 1
+        self.draft_cfg: Optional[ModelConfig] = None
+        self.draft_params = None
+        self.draft_pages = None
+        self.draft_tables = None
+        self.draft_logits = None
+        self.spec_windows = 0
+        self.spec_slot_windows = 0   # verify rows: active slots × windows
+        self.spec_emitted = 0        # tokens emitted by speculative windows
+        self.spec_accepted = 0       # draft proposals accepted (emitted - 1)
+        self.spec_drafted = 0        # draft proposals offered (k per row)
+        self.draft_quarantined = 0   # draft pools permanently iced by guard
+        self.draft_prefill_tokens = 0    # draft-pool admission prefills
+        self.draft_reprefill_tokens = 0  # draft rebuilds at swap resume
+        if spec_decode:
+            if draft_k < 1:
+                raise ValueError("draft_k must be >= 1")
+            if not fuse:
+                raise ValueError("spec_decode requires the fused window "
+                                 "path (fuse=True)")
+            dcfg = draft_cfg if draft_cfg is not None else cfg
+            ok, why = M.supports_paged(dcfg)
+            if not ok:
+                raise NotImplementedError(f"draft {dcfg.name}: {why}")
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    "draft vocab must match the target vocab "
+                    f"({dcfg.vocab_size} != {cfg.vocab_size}): proposals "
+                    "are consumed verbatim by the target's embedding")
+            self.draft_cfg = dcfg
+            # self-draft (no explicit draft cfg or params) shares the
+            # target weights: the acceptance-rate ceiling and the bench
+            # sanity config — every proposal must verify
+            self.draft_params = (
+                draft_params if draft_params is not None
+                else self.params if draft_cfg is None
+                else M.init_params(dcfg, jax.random.PRNGKey(draft_seed)))
+            djt = _jitted(dcfg, dtype)
+            self._draft_prefill_wave = djt["prefill_wave"]
+            self._draft_window = djt["draft_window"]
+            self._verify_window = jt["verify_window"]
+            self.draft_pages = M.init_paged_cache(
+                dcfg, self.allocator.num_blocks, self.bt,
+                dtype=jnp.float32 if dtype == jnp.float32 else jnp.bfloat16)
+            self.draft_tables = jnp.tile(self._null_row[None, :], (b, 1))
+            self.draft_logits = jnp.zeros((b, dcfg.padded_vocab), dtype)
         self.window_stats: Optional[Dict[str, int]] = None
         self.generated: Dict[int, List[int]] = {}   # finished req -> tokens
         # admission hot-path memo: encoded prompt ids per (instruction,
@@ -564,10 +639,20 @@ class PagedContinuousEngine:
     _NULL_SEQ = NULL_SEQ   # allocator seq_id owning the null block
                            # (shared constant: serving.paged_cache.NULL_SEQ)
 
+    # §16: allocator seq_ids owning a slot's DRAFT pool blocks live in
+    # their own negative band, distinct from NULL_SEQ (-1) and the fault
+    # injector's FAULT_SEQ (-2), so drain checks and shadow reports can
+    # name which pool leaked
+    _DRAFT_SEQ_BASE = -100
+
+    def _draft_seq(self, slot: int) -> int:
+        return self._DRAFT_SEQ_BASE - slot
+
     # device-resident attrs: hotlint taints reads of these in hot regions
     # (pos_host and the allocator tables are HOST mirrors, deliberately
     # absent — reading them costs nothing)
-    _DEVICE_STATE = ("pages", "tables", "positions", "active_mask", "logits")
+    _DEVICE_STATE = ("pages", "tables", "positions", "active_mask", "logits",
+                     "draft_pages", "draft_tables", "draft_logits")
 
     # -- admission -----------------------------------------------------------
 
@@ -707,6 +792,10 @@ class PagedContinuousEngine:
                 keep = m.node
                 full = m.full_blocks(self.bt) * self.bt
         need = self.allocator.blocks_needed(want - full)
+        if self.spec_decode:
+            # the draft pool shares nothing (no radix for drafts): a full
+            # private copy of the reservation rides every admission
+            need += self.allocator.blocks_needed(want)
         return need <= (len(self.allocator.free)
                         + self._reclaimable_blocks(keep=keep))
 
@@ -770,8 +859,12 @@ class PagedContinuousEngine:
         if m is not None:
             self.prefix_cache.pin(m.node)   # protect from LRU while admitting
         try:
-            if not self.allocator.can_allocate_new(want - full):
-                need = self.allocator.blocks_needed(want - full)
+            need = self.allocator.blocks_needed(want - full)
+            if self.spec_decode:
+                # §16: the slot's draft pool claims a full private copy
+                # of the reservation (drafts never share radix blocks)
+                need += self.allocator.blocks_needed(want)
+            if need > len(self.allocator.free):
                 if self.prefix_cache is None \
                         or not self.prefix_cache.evict_until(need):
                     raise EngineFull(
@@ -800,6 +893,13 @@ class PagedContinuousEngine:
                 else:
                     self.prefix_cache.misses -= 1
             raise
+        draft_table: List[int] = []
+        if self.spec_decode:
+            # allocated last, after every refusable step: an EngineFull
+            # above leaves no half-claimed draft pool to roll back.  The
+            # probe counted these blocks, so this allocate cannot fail.
+            draft_table = list(self.allocator.allocate(
+                self._draft_seq(slot), want))
         if self.prefix_cache is not None and share_ids:
             self._publish_queue.append((tuple(share_ids), list(table)))
             self._wave_pending.append(
@@ -819,7 +919,8 @@ class PagedContinuousEngine:
                              "reserve_tokens": want,
                              "reserve_g": want - len(ids)}
         return {"slot": slot, "ids": ids, "table": table, "cached": cached,
-                "cow": cow, "gen": gen, "req": req}
+                "cow": cow, "gen": gen, "req": req,
+                "draft_table": draft_table}
 
     def _dispatch_wave(self, plans: List[Dict[str, object]]) -> None:
         """ONE jitted dispatch for a group of just-reserved requests
@@ -909,6 +1010,71 @@ class PagedContinuousEngine:
                 # the dispatch above wrote this slot's KV: from here on a
                 # same-wave sharer writing into its pages is a violation
                 shadow.mark_materialized(p["slot"])
+        if self.spec_decode:
+            # §16: seed the wave's draft pools in one extra dispatch
+            # (draft-model weights — it does not ride, and is not
+            # counted as, a target prefill_dispatches wave)
+            self._draft_prefill(
+                [(p["slot"], p["ids"], p["draft_table"]) for p in plans])
+
+    def _draft_prefill(self, items: List[Tuple[int, List[int], List[int]]],
+                       *, resume: bool = False) -> None:
+        """ONE draft-model prefill dispatch building draft-pool KV for a
+        group of ``(slot, token_ids, draft_table)`` rows (§16).  Always a
+        full-history, prefix-0 wave — the draft pool has no radix tree to
+        share from.  Rides the generic ``prefill_wave`` entry point under
+        the DRAFT config; its state scatter rebinds positions/active with
+        the values the target wave already set (identical), so only the
+        draft tables and the draft carry logits actually change."""
+        n = len(items)
+        nb = _pow2_ceil(n)
+        sb = _bucket(max(len(ids) for _, ids, _ in items))
+        tokens = np.zeros((nb, sb), np.int32)
+        lengths = np.ones(nb, np.int32)
+        wlens = np.zeros(nb, np.int32)       # scatter validity: pads drop
+        plens = np.zeros(nb, np.int32)
+        rows = np.full((nb, self.max_blocks), self.null_block, np.int32)
+        nulls = np.full(nb, self.null_block, np.int32)
+        attn = np.full((nb, 1), self.null_block, np.int32)
+        slots = np.zeros(nb, np.int32)
+        sel = np.zeros(nb, np.int32)
+        pos_vals = np.ones(nb, np.int32)
+        shadow = getattr(self.allocator, "_shadow", None)
+        for i, (slot, ids, table) in enumerate(items):
+            tokens[i, :len(ids)] = ids
+            lengths[i] = len(ids)
+            wlens[i] = len(ids)
+            rows[i, :len(table)] = table
+            slots[i] = slot
+            sel[i] = i
+            pos_vals[i] = len(ids)
+            if resume:
+                self.draft_reprefill_tokens += len(ids)
+            else:
+                self.draft_prefill_tokens += len(ids)
+            if shadow is not None:
+                # draft blocks are never shared: the whole table must be
+                # privately owned by this slot's draft seq
+                shadow.check_write(self._draft_seq(slot), table)
+        rows[n:] = rows[0]
+        slots[n:] = slots[0]
+        pos_vals[n:] = pos_vals[0]
+        state = {"tables": self.draft_tables, "positions": self.positions,
+                 "active": self.active_mask, "logits": self.draft_logits}
+        self.draft_pages, state = self._draft_prefill_wave(
+            self.draft_params, pages=self.draft_pages, state=state,
+            batch={"tokens": tokens, "lengths": lengths,
+                   "prefix_lens": plens, "attn_tables": attn,
+                   "tables": rows, "write_lens": wlens,
+                   "cow_src": nulls, "cow_dst": nulls, "slots": slots,
+                   "row_sel": sel, "positions": pos_vals})
+        self.draft_tables = state["tables"]
+        self.positions = state["positions"]
+        self.active_mask = state["active"]
+        self.draft_logits = state["logits"]
+        if shadow is not None:
+            for slot, _, _ in items:
+                shadow.mark_materialized(self._draft_seq(slot))
 
     def _prefill_admitted(self, admitted: List[Dict[str, object]]) -> None:
         """Order the wave radix-aware and dispatch it with the minimum
@@ -973,6 +1139,13 @@ class PagedContinuousEngine:
 
     def _release(self, slot: int) -> None:
         """Reset a slot's device/host state to idle (null table, pos 0)."""
+        if self.spec_decode:
+            # the slot's draft pool dies with it (finish, eviction and
+            # swap-out all land here); already-quarantined drafts freed
+            # their seq earlier — free_seq of a missing seq is a no-op
+            self.allocator.free_seq(self._draft_seq(slot))
+            self.draft_tables = self.draft_tables.at[slot].set(
+                self._null_row)
         self.tables = self.tables.at[slot].set(self._null_row)
         self.positions = self.positions.at[slot].set(0)
         self.active_mask = self.active_mask.at[slot].set(False)
@@ -1149,6 +1322,17 @@ class PagedContinuousEngine:
                              "deadline": image["deadline"],
                              "reserve_tokens": image["reserve_tokens"],
                              "reserve_g": image["reserve_g"]}
+        if self.spec_decode:
+            # §16: the draft pool was dropped at suspension (draft KV is
+            # disposable — verification is the correctness oracle), so
+            # rebuild it with one DRAFT prefill over the full history.
+            # The target stream itself re-prefills nothing: the §15
+            # zero-re-prefill invariant and its counter are untouched.
+            draft_table = list(self.allocator.allocate(
+                self._draft_seq(slot), max(pos, 1)))
+            self._draft_prefill(
+                [(slot, self._prompt_ids(image["req"])
+                  + list(image["generated"]), draft_table)], resume=True)
         self.swap.drop(rid, self.allocator)
         del self._swapped[rid]
         self._swap_debt.discard(rid)
@@ -1165,11 +1349,15 @@ class PagedContinuousEngine:
         image = self._swapped[rid]
         while True:
             shared, host_slots = self.swap.split_resident(rid)
-            if len(host_slots) <= len(self.allocator.free):
+            need = len(host_slots)
+            if self.spec_decode:
+                # the resume also rebuilds the slot's draft pool (§16)
+                need += self.allocator.blocks_needed(int(image["pos"]))
+            if need <= len(self.allocator.free):
                 self._swap_in(rid, image, shared, host_slots)
                 return True
             if self.prefix_cache is not None \
-                    and self.prefix_cache.evict_until(len(host_slots)):
+                    and self.prefix_cache.evict_until(need):
                 continue
             if self.swap.release_device_holds(self.allocator):
                 continue   # holds freed; re-split (shared prefix shrank)
@@ -1236,8 +1424,13 @@ class PagedContinuousEngine:
         demand.  Returns (src, dst) copy-on-write page-copy pairs the
         caller must apply on device before decoding — a published
         partial instruction tail still shared with the radix cache is
-        the case that triggers one (DESIGN.md §11)."""
-        need = int(self.pos_host[slot]) + 1
+        the case that triggers one (DESIGN.md §11).
+
+        With speculation on, the window writes up to ``spec_w`` lookahead
+        positions before rollback truncates the rejected tail (§16), so
+        the capacity target grows from pos+1 to pos+spec_w."""
+        need = int(self.pos_host[slot]) \
+            + (self.spec_w if self.spec_decode else 1)
         if self.allocator.blocks_needed(need) > self.max_blocks:
             raise MemoryError(
                 f"request outgrew max_len+max_gen table ({self.max_blocks} "
@@ -1326,6 +1519,37 @@ class PagedContinuousEngine:
             self.tables = self.tables.at[slot].set(jnp.asarray(row))
         return pairs
 
+    def _grow_draft(self, slot: int, evicted: List[Request]) -> None:
+        """§16 counterpart of :meth:`_grow` for the slot's draft pool:
+        ensure it can hold ``pos + spec_w`` tokens through the same
+        pressure-valve escalation.  No COW loop — draft blocks are never
+        shared (refcount 1 always), so growth is pure allocation."""
+        seq = self._draft_seq(slot)
+        need = int(self.pos_host[slot]) + self.spec_w
+        had = len(self.allocator.tables.get(seq, ()))
+        while not self.allocator.can_allocate(seq, need):
+            missing = (self.allocator.blocks_needed(need)
+                       - len(self.allocator.tables.get(seq, ())))
+            if self.swap is not None \
+                    and self.swap.release_device_holds(self.allocator):
+                continue
+            if self.prefix_cache is not None \
+                    and self.prefix_cache.evict_until(missing):
+                continue
+            if self.swap is not None and self._swap_out_victim(exclude=slot):
+                continue
+            victim = self._pick_victim(exclude=slot)
+            if victim is None:
+                raise MemoryError(
+                    "paged pool exhausted by sequences outside this engine")
+            evicted.append(self._evict(victim))
+        table = self.allocator.allocate(seq, need)
+        if len(table) != had:
+            row = np.full(self.max_blocks, self.null_block, np.int32)
+            row[:len(table)] = table
+            self.draft_tables = self.draft_tables.at[slot].set(
+                jnp.asarray(row))
+
     # -- decode --------------------------------------------------------------
 
     def _window_steps(self) -> int:
@@ -1409,6 +1633,20 @@ class PagedContinuousEngine:
                     self.logits = self.logits.at[slot].set(0.0)
                     evicted.append(self._evict(slot))
                     self.quarantined += 1
+        if (self.spec_decode and self._nan_guard
+                and any(a is not None for a in self.active)):
+            # §16 draft-health guard: a poisoned DRAFT must not kill the
+            # request — verification is the correctness oracle — so the
+            # guard ices the slot's draft permanently (proposals stop,
+            # the stream continues at one verified token per window)
+            # instead of evicting anything
+            # hotlint: sync(§16 draft-health guard readback)
+            dfinite = np.isfinite(np.asarray(self.draft_logits)).all(axis=1)
+            self.host_syncs += count_sync()
+            for slot, a in enumerate(self.active):
+                if a is not None and not a.get("draft_cold") \
+                        and not bool(dfinite[slot]):
+                    self._quarantine_draft(slot)
         if stalled or not any(a is not None for a in self.active):
             self.window_stats = None
             return [], evicted, 0
@@ -1441,6 +1679,19 @@ class PagedContinuousEngine:
                     for i, (s, d) in enumerate(pairs):
                         src[i], dst[i] = s, d
                     self.pages = self._copy_pages(self.pages, src, dst)
+                if self.spec_decode and not a.get("draft_cold"):
+                    # the slot's draft pool grows to the same pos+spec_w
+                    # target through the same valves (after the COW
+                    # copies above so an eviction here cannot recycle a
+                    # clone source before its page copy ran)
+                    try:
+                        self._grow_draft(slot, evicted)
+                    except MemoryError:
+                        if self.faults is not None \
+                                and self.faults.held_blocks:
+                            evicted.append(self._evict(slot))
+                            continue
+                        raise
         except MemoryError as e:
             # don't strand anything on a failed grow: requests evicted
             # earlier in this same step ride the typed exception for
@@ -1462,6 +1713,14 @@ class PagedContinuousEngine:
                     t = self.allocator.tables[slot]
                     shadow.check_write(
                         slot, t[int(self.pos_host[slot]) // self.bt:])
+                    if self.spec_decode and not a.get("draft_cold"):
+                        dseq = self._draft_seq(slot)
+                        dt = self.allocator.tables.get(dseq, [])
+                        shadow.check_write(
+                            dseq, dt[int(self.pos_host[slot]) // self.bt:])
+        if self.spec_decode:
+            finished, k = self._spec_window(max_steps)
+            return finished, evicted, k
         k = self._window_steps()
         if max_steps is not None:
             k = max(1, min(k, max_steps))
@@ -1505,6 +1764,108 @@ class PagedContinuousEngine:
                 self.allocator.free_seq(slot)
                 self._release(slot)
         return finished, evicted, k
+
+    def _quarantine_draft(self, slot: int) -> None:
+        """Permanently ice a slot's draft (§16): free its draft pool,
+        null its draft table row and clear the poisoned carry row.  The
+        slot keeps serving — every window still emits its one verified
+        token — and only a fresh admission builds a new draft."""
+        self.allocator.free_seq(self._draft_seq(slot))
+        self.draft_tables = self.draft_tables.at[slot].set(self._null_row)
+        self.draft_logits = self.draft_logits.at[slot].set(0.0)
+        self.active[slot]["draft_cold"] = True
+        self.draft_quarantined += 1
+
+    @hot_path
+    def _spec_window(self, max_steps: Optional[int]
+                     ) -> Tuple[List[Request], int]:
+        """One speculative window (§16): the draft proposes ``spec_w``
+        tokens per active slot in one fused dispatch, the target
+        verifies all of them in ONE batched dispatch over the same
+        positions, and the longest agreeing prefix is accepted on-device
+        — the host reads back a single packed [tokens | accept-count]
+        row per slot, the same one-sync-per-window budget as the §9
+        fused window.  Rollback of the rejected tail is block-table
+        truncation on both pools plus the position rewind the verify
+        dispatch already applied on device; truncation never mutates a
+        block — a trailing block the radix tree still holds only loses
+        this slot's reference (COW rules apply to rollback too)."""
+        w = self.spec_w
+        max_emit = np.ones(self.slots, np.int32)
+        for slot, a in enumerate(self.active):
+            if a is None:
+                continue
+            e = min(a["target"] - len(a["generated"]), w)
+            if max_steps is not None:
+                e = min(e, max_steps)
+            max_emit[slot] = max(e, 1)
+        # post-grow/evict snapshot (same contract as the fused window):
+        # drivers reconstruct the per-iteration utilization ramp from it
+        self.window_stats = {
+            "live0": int(sum(int(self.pos_host[s])
+                             for s, a in enumerate(self.active)
+                             if a is not None)),
+            "active": self.num_active,
+            "used_tokens": self.allocator.used_blocks * self.bt,
+        }
+        self.draft_logits, self.draft_pages, proposed = self._draft_window(
+            self.draft_params, pages=self.draft_pages,
+            batch={"target_logits": self.logits,
+                   "logits": self.draft_logits,
+                   "positions": self.positions,
+                   "block_tables": self.draft_tables,
+                   "active": self.active_mask},
+            num_steps=w, target_vocab=self.cfg.vocab_size)
+        (self.logits, self.pages, self.positions,
+         packed) = self._verify_window(
+            self.params, pages=self.pages,
+            batch={"proposed": proposed, "logits": self.logits,
+                   "positions": self.positions,
+                   "block_tables": self.tables,
+                   "active": self.active_mask, "max_emit": max_emit})
+        # hotlint: sync(the one spec-window readback — §16 packed tokens + accept counts)
+        packed = np.asarray(packed)
+        self.host_syncs += count_sync()
+        self.spec_windows += 1
+        finished: List[Request] = []
+        kmax = 0
+        for slot, a in enumerate(self.active):
+            if a is None:
+                continue
+            e = int(packed[slot, w])
+            a["generated"].extend(packed[slot, :e].tolist())
+            self.pos_host[slot] += e
+            kmax = max(kmax, e)
+            self.spec_slot_windows += 1
+            self.spec_emitted += e
+            self.spec_accepted += max(e - 1, 0)
+            if not a.get("draft_cold"):
+                # proposals clamped away by max_emit (finish boundary,
+                # max_steps) were never candidates — counting them as
+                # rejections would understate real draft quality
+                self.spec_drafted += min(w - 1, int(max_emit[slot]) - 1)
+            if len(a["generated"]) >= a["target"]:
+                finished.append(a["req"])
+                self.generated[a["req"].req_id] = a["generated"]
+                self.mispredict.observe(a["req"].app, a["reserve_g"],
+                                        len(a["generated"]))
+                self._unpin_prefix(slot)
+                self.allocator.free_seq(slot)
+                self._release(slot)
+                continue
+            # rollback = truncation: both pools drop every block past the
+            # accepted stream, floored at the admission reservation so
+            # speculation cannot silently un-reserve the blocks the §13
+            # admission control promised this request
+            keep = max(
+                self.allocator.blocks_needed(
+                    max(int(self.pos_host[slot]), 1)),
+                self.allocator.blocks_needed(int(a["reserve_tokens"])))
+            self.allocator.truncate(slot, keep)
+            self.allocator.truncate(self._draft_seq(slot), keep)
+        self.decode_steps += kmax
+        self.clock += kmax
+        return finished, kmax
 
     def step(self) -> Tuple[List[Request], List[Request]]:
         """One decode iteration (a k=1 window); returns (finished,
@@ -1624,6 +1985,68 @@ class PagedContinuousEngine:
                 jnp.array(self.active_mask), jnp.array(self.logits),
                 s0, np.full(self.max_blocks, self.null_block, np.int32),
                 0, np.zeros(self.logits.shape[1], self.logits.dtype))
+        if self.spec_decode:
+            # §16 speculative path: the spec engine never dispatches the
+            # plain fused window, so warm its shapes instead — the draft
+            # admission/rebuild wave grid, one draft-window shape and one
+            # verify-window shape.  All idle-mask: junk lands in the
+            # null block and every emit count is 0.
+            dtop = self.max_len + (self.max_gen if self.swap is not None
+                                   else 0)   # resume re-prefills history
+            dbuckets = [b for b in _BUCKETS if b <= _bucket(dtop)]
+            nxt = _BUCKETS[-1] * 2
+            while nxt <= _bucket(dtop):
+                dbuckets.append(nxt)
+                nxt *= 2
+            dbuckets = dbuckets or [_bucket(dtop)]
+            for nb in batch_sizes:
+                zeros = np.zeros(nb, np.int32)
+                nulls = np.full(nb, self.null_block, np.int32)
+                for sb in dbuckets:
+                    state = {"tables": jnp.array(self.draft_tables),
+                             "positions": jnp.array(self.positions),
+                             "active": jnp.array(self.active_mask),
+                             "logits": jnp.array(self.draft_logits)}
+                    self.draft_pages, _ = self._draft_prefill_wave(
+                        self.draft_params, pages=self.draft_pages,
+                        state=state,
+                        batch={"tokens": np.zeros((nb, sb), np.int32),
+                               "lengths": np.ones(nb, np.int32),
+                               "prefix_lens": zeros,
+                               "attn_tables": np.full(
+                                   (nb, 1), self.null_block, np.int32),
+                               "tables": np.full(
+                                   (nb, self.max_blocks),
+                                   self.null_block, np.int32),
+                               "write_lens": zeros,
+                               "cow_src": nulls,
+                               "cow_dst": nulls,
+                               "slots": zeros,
+                               "row_sel": zeros,
+                               "positions": zeros})
+            self.draft_logits, self.draft_pages, proposed = \
+                self._draft_window(
+                    self.draft_params, pages=self.draft_pages,
+                    batch={"target_logits": self.logits,
+                           "logits": self.draft_logits,
+                           "positions": self.positions,
+                           "block_tables": self.draft_tables,
+                           "active": self.active_mask},
+                    num_steps=self.spec_w,
+                    target_vocab=self.cfg.vocab_size)
+            self.logits, self.pages, self.positions, _ = \
+                self._verify_window(
+                    self.params, pages=self.pages,
+                    batch={"proposed": proposed, "logits": self.logits,
+                           "positions": self.positions,
+                           "block_tables": self.tables,
+                           "active": self.active_mask,
+                           "max_emit": np.ones(self.slots, np.int32)})
+            # the eager per-row ops the draft guard / quarantine /
+            # release paths issue
+            self.draft_tables.at[0].set(self._null_row)
+            self.draft_logits.at[0].set(0.0)
+            return
         for k in windows:
             # pages are donated-and-reassigned (dropping them would delete
             # the live pool); logits/positions/tokens are discarded — an
@@ -1783,4 +2206,21 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
             "retries_max": max(engine.retries.values(), default=0),
             "swap_outs": engine.swap_outs,
             "swap_ins": engine.swap_ins,
-            "reprefilled_swapped_tokens": engine.reprefilled_swapped_tokens}
+            "reprefilled_swapped_tokens": engine.reprefilled_swapped_tokens,
+            # §16 speculative decoding (all zero with spec off)
+            "spec_windows": engine.spec_windows,
+            "spec_emitted": engine.spec_emitted,
+            "spec_accepted": engine.spec_accepted,
+            "spec_drafted": engine.spec_drafted,
+            "draft_quarantined": engine.draft_quarantined,
+            "draft_prefill_tokens": engine.draft_prefill_tokens,
+            "draft_reprefill_tokens": engine.draft_reprefill_tokens,
+            # headline §16 metric: tokens emitted per TARGET dispatch row
+            # (1.0 is the non-speculative baseline; > 1.0 means the
+            # verify dispatch amortized accepted draft work)
+            "accepted_per_dispatch": (
+                engine.spec_emitted / engine.spec_slot_windows
+                if engine.spec_slot_windows else 0.0),
+            "acceptance_rate": (
+                engine.spec_accepted / engine.spec_drafted
+                if engine.spec_drafted else 0.0)}

@@ -23,6 +23,12 @@ Fault kinds (each a :class:`FaultEvent` on the plan):
     Overwrite one active slot's logits row with NaN before the next
     decode window — the engine's NaN/Inf guard must quarantine exactly
     that slot and keep every surviving stream bit-exact.
+``poison_draft_logits``
+    Overwrite one active slot's *draft* logits row with NaN before the
+    next speculative window — the engine's draft guard must quarantine
+    the slot's draft (cold draft: proposals stop, verification carries
+    the stream) without touching the verified target stream
+    (DESIGN.md §16).  A no-op on a spec-off engine.
 ``stall``
     Burn ``ticks`` scheduler-clock ticks without decoding (a stalled
     window): deadline/TTL accounting must advance, streams must not.
@@ -68,7 +74,8 @@ __all__ = ["FAULT_SEQ", "KINDS", "SHED_REASONS", "ShedReason",
 FAULT_SEQ = -2
 
 KINDS = ("pool_shrink", "pool_restore", "predict_skew", "poison_logits",
-         "stall", "radix_corrupt", "swap_stall", "host_pressure")
+         "poison_draft_logits", "stall", "radix_corrupt", "swap_stall",
+         "host_pressure")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +136,7 @@ class FaultInjector:
         # counters (surfaced next to the engine's robustness counters)
         self.corrupted_predictions = 0
         self.poisoned = 0
+        self.draft_poisoned = 0
         self.stalled_ticks = 0
         self.radix_corruptions_blocked = 0
         self.radix_probes_unchecked = 0
@@ -172,6 +180,8 @@ class FaultInjector:
                 self._skew[ev.app] = ev.factor
             elif ev.kind == "poison_logits":
                 self._poison(engine, ev.slot)
+            elif ev.kind == "poison_draft_logits":
+                self._poison_draft(engine, ev.slot)
             elif ev.kind == "stall":
                 stall += ev.ticks
                 self.stalled_ticks += ev.ticks
@@ -231,6 +241,18 @@ class FaultInjector:
         engine.logits = engine.logits.at[slot].set(float("nan"))
         self.poisoned += 1
 
+    def _poison_draft(self, engine, slot: Optional[int]) -> None:
+        if getattr(engine, "draft_logits", None) is None:
+            return                      # spec decode off; event is a no-op
+        if slot is None or slot >= len(engine.active) \
+                or engine.active[slot] is None:
+            slot = next((s for s, a in enumerate(engine.active)
+                         if a is not None), None)
+        if slot is None:
+            return                      # nothing active; event is a no-op
+        engine.draft_logits = engine.draft_logits.at[slot].set(float("nan"))
+        self.draft_poisoned += 1
+
     def _radix_corrupt(self, engine) -> None:
         """Rogue write into a cache-held radix block, routed through the
         shadow allocator: the sanitizer must *block* it (SharedWriteError
@@ -259,6 +281,7 @@ class FaultInjector:
                 "held_blocks": self.held_blocks,
                 "corrupted_predictions": self.corrupted_predictions,
                 "poisoned": self.poisoned,
+                "draft_poisoned": self.draft_poisoned,
                 "stalled_ticks": self.stalled_ticks,
                 "radix_corruptions_blocked": self.radix_corruptions_blocked,
                 "radix_probes_unchecked": self.radix_probes_unchecked,

@@ -202,6 +202,25 @@ class BlockAllocator:
         if self._shadow is not None:
             self._shadow.on_free_seq(seq_id)
 
+    def truncate(self, seq_id: int, keep_blocks: int) -> List[int]:
+        """Shrink seq ``seq_id``'s table to its first ``keep_blocks``
+        entries, releasing one reference per trailing block — the
+        speculative-decode rollback primitive (DESIGN.md §16).
+
+        Truncation only ever *decrements*: a trailing block that is also
+        held elsewhere (a published radix page, a swap image's device
+        hold) survives with its other references and is never mutated —
+        COW rules apply to rollback exactly as to append.  Returns the
+        released trailing blocks."""
+        table = self.tables.get(seq_id, [])
+        if keep_blocks < 0:
+            raise ValueError(f"keep_blocks must be >= 0, got {keep_blocks}")
+        trailing = table[keep_blocks:]
+        if trailing:
+            del table[keep_blocks:]
+            self.release(trailing, holder=seq_id)
+        return trailing
+
     @property
     def used_blocks(self) -> int:
         return self.num_blocks - len(self.free)

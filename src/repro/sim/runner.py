@@ -31,7 +31,13 @@ class HostSyncCost:
     (ISSUE 2 / DESIGN.md §9).  ``dispatch="per-token"`` pays one sync per
     decode iteration — the pre-fusion engine; ``dispatch="fused"`` pays one
     per power-of-two window (``popcount(bg)`` windows for a ``bg``-step
-    batch, mirroring ``PagedContinuousEngine.step_window``'s chunking).
+    batch, mirroring ``PagedContinuousEngine.step_window``'s chunking);
+    ``dispatch="spec"`` prices §16 speculative decoding — each window runs
+    ``draft_k`` draft iterations (a ``draft_cost_ratio`` fraction of a
+    target iteration each) plus ONE batched verify dispatch covering
+    ``draft_k + 1`` positions, and emits ``accepted_per_dispatch()``
+    tokens per packed-readback sync, so the cost per emitted token scales
+    with 1/accepted-per-dispatch (the §16 headline metric).
 
     ``admission_dispatches`` prices the batch's *prefill* dispatches the
     same way (DESIGN.md §12): the single-dispatch variable-prefix wave
@@ -45,20 +51,65 @@ class HostSyncCost:
     NOMINAL_WINDOW = 8
 
     def __init__(self, base: CostModel, host_sync_s: float,
-                 dispatch: str = "fused", admission_dispatches: int = 1):
-        if dispatch not in ("fused", "per-token"):
+                 dispatch: str = "fused", admission_dispatches: int = 1,
+                 draft_k: int = 4, acceptance: float = 0.8,
+                 draft_cost_ratio: float = 0.2):
+        if dispatch not in ("fused", "per-token", "spec"):
             raise ValueError(f"unknown dispatch {dispatch!r}")
+        if not 0.0 <= acceptance <= 1.0:
+            raise ValueError(f"acceptance {acceptance} not in [0, 1]")
         self._base = base
         self.host_sync_s = host_sync_s
         self.dispatch = dispatch
         self.admission_dispatches = admission_dispatches
+        self.draft_k = draft_k
+        self.acceptance = acceptance
+        self.draft_cost_ratio = draft_cost_ratio
 
     def __getattr__(self, name):
         return getattr(self._base, name)
 
+    # -- speculative decoding (DESIGN.md §16) --------------------------------
+
+    def accepted_per_dispatch(self) -> float:
+        """Expected tokens emitted per verify dispatch: the accepted
+        prefix is geometric in ``acceptance`` over ``draft_k`` proposals,
+        plus the target's own token every window — so the floor is 1.0
+        (an always-rejecting draft) and the ceiling ``draft_k + 1``
+        (self-draft)."""
+        a, k = self.acceptance, self.draft_k
+        if a >= 1.0:
+            return k + 1.0
+        return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+    def spec_window_time(self, n_active: int, ctx: float) -> float:
+        """Price one speculative window for the whole batch: ``draft_k``
+        draft iterations at ``draft_cost_ratio`` of a target iteration,
+        one batched verify dispatch — ``draft_k + 1`` positions' worth of
+        token FLOPs but the parameter/KV reread paid ONCE (decode is
+        memory-bound, which is why verification is nearly free) — and the
+        single packed-readback host sync."""
+        w = self.draft_k + 1
+        base = self._base
+        flops = base.active_flops_per_token * n_active * w
+        kv = base.cfg.kv_bytes_per_token(base.kv_dtype_bytes)
+        ctx_eff = min(ctx, base.cfg.sliding_window) \
+            if base.cfg.sliding_window else ctx
+        bytes_moved = (base.param_bytes
+                       + n_active * (kv * ctx_eff
+                                     + base.cfg.state_bytes(
+                                         base.kv_dtype_bytes)))
+        verify = base._iter_time(flops, bytes_moved)
+        draft = (self.draft_k * self.draft_cost_ratio
+                 * base.decode_iter_time(n_active, ctx))
+        return draft + verify + self.host_sync_s
+
     def _syncs(self, iters: int) -> int:
         if self.dispatch == "fused":
             return bin(max(int(iters), 0)).count("1")
+        if self.dispatch == "spec":
+            return -(-max(int(iters), 0) // max(
+                int(self.accepted_per_dispatch()), 1))
         return max(int(iters), 0)
 
     def batch_serving_time(self, beta: int, bl: int, bg: int) -> float:
@@ -67,6 +118,12 @@ class HostSyncCost:
                 * self.host_sync_s)
 
     def decode_iter_time(self, n_active: int, ctx: float) -> float:
+        if self.dispatch == "spec":
+            # amortized per EMITTED token: window cost over the expected
+            # accepted prefix — 1/accepted_per_dispatch is the knob the
+            # §16 engine counters measure
+            return (self.spec_window_time(n_active, ctx)
+                    / self.accepted_per_dispatch())
         per_iter = (self.host_sync_s / self.NOMINAL_WINDOW
                     if self.dispatch == "fused" else self.host_sync_s)
         return self._base.decode_iter_time(n_active, ctx) + per_iter
@@ -115,6 +172,8 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
                  kv_dtype_bytes: int = 2,
                  host_sync_s: float = 0.0, dispatch: str = "fused",
                  admission_dispatches: int = 1,
+                 spec_draft_k: int = 4, spec_acceptance: float = 0.8,
+                 spec_draft_cost_ratio: float = 0.2,
                  prefix_sharing: bool = False,
                  seed: int = 0) -> Metrics:
     workload = copy.deepcopy(workload)   # sims mutate finish times
@@ -132,7 +191,10 @@ def run_strategy(strategy: str, workload: List[Request], cfg: ModelConfig, *,
     cost = CostModel(cfg, hw, quantized=quant, kv_dtype_bytes=kv_dtype_bytes)
     if host_sync_s > 0.0:
         cost = HostSyncCost(cost, host_sync_s, dispatch,
-                            admission_dispatches=admission_dispatches)
+                            admission_dispatches=admission_dispatches,
+                            draft_k=spec_draft_k,
+                            acceptance=spec_acceptance,
+                            draft_cost_ratio=spec_draft_cost_ratio)
     if strategy == "ccb":
         limit = fixed_batch_size or MemoryModel(
             cfg, hbm_bytes=hw.hbm_bytes * hw.chips,

@@ -11,3 +11,28 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# -- shared tiny-config constructors ------------------------------------------
+# One source of truth for the CPU-sized configs the suite runs real
+# models with, replacing the per-module `get_config(...).reduced(...)`
+# copies (plain functions, not fixtures: the engine tests build their
+# configs at module scope to share module-cached params/engines).
+
+def tiny_cfg(**kw):
+    """The canonical reduced smollm config most model-level tests use."""
+    from repro.configs import get_config
+    return get_config("smollm-135m").reduced(**kw)
+
+
+def tiny_engine_cfg():
+    """The smaller 2-layer/64-dim variant the serving-engine tests use
+    (fast enough for multi-engine bit-exactness comparisons)."""
+    return tiny_cfg(num_layers=2, d_model=64)
+
+
+def tiny_draft_cfg():
+    """A draft-sized config strictly smaller than ``tiny_engine_cfg`` —
+    the §16 speculative-decode tests' non-trivial draft model (same
+    vocab, different weights: proposals can be rejected)."""
+    return tiny_engine_cfg().reduced(num_layers=1, d_model=32)

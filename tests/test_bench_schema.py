@@ -13,7 +13,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks.extensions import (BENCH_ENGINE_SCHEMA_VERSION,  # noqa: E402
                                    chaos_storm, engine_perf,
                                    prefix_cache_sweep, radix_prefix_sweep,
-                                   swap_storm)
+                                   spec_decode_bench, swap_storm)
 
 ENGINE_KEYS = {"decode_steps", "tokens", "wall_s", "steps_per_s",
                "tokens_per_s", "host_syncs", "host_syncs_per_token"}
@@ -39,6 +39,9 @@ SWAP_KEYS = {"completed", "shed", "evictions", "swap_outs", "swap_ins",
              "hung", "accounted", "stranded_blocks", "drained",
              "resume_s_per_swap_in", "reprefill_s_per_request",
              "reprefill_gen_tokens", "resume_cheaper", "faults", "wall_s"}
+SPEC_ENGINES = {"spec_off", "spec_on"}
+SPEC_KEYS = {"acceptance_rate", "accepted_per_dispatch", "bit_exact",
+             "speedup_spec_vs_off", "engines", "config"}
 
 
 @pytest.fixture(scope="module")
@@ -52,6 +55,10 @@ def bench_doc(tmp_path_factory):
                        input_words=5, gen_length=2, out_path=str(out))
     chaos_storm(n_requests=4, max_gen=8, out_path=str(out))
     swap_storm(n_requests=6, out_path=str(out))
+    # max_gen a multiple of draft_k+1: no clamped final window, so the
+    # self-draft accepted_per_dispatch is exactly draft_k+1
+    spec_decode_bench(n_requests=3, max_gen=10, repeats=1,
+                      out_path=str(out))
     return json.loads(out.read_text())
 
 
@@ -195,6 +202,35 @@ def test_bench_swap_section(bench_doc):
     # sibling sections survived the merge
     assert set(bench_doc["engines"]) == ENGINES
     assert "chaos" in bench_doc
+
+
+def test_bench_spec_decode_section(bench_doc):
+    """Schema v7: the spec_decode section records the §16 speculative-
+    decoding contract — acceptance rate, accepted tokens per target
+    dispatch (self-draft pins it at draft_k+1), and the bit-exactness
+    indicator the check_bench floors pin.  Wall-time speedup is recorded
+    but not asserted (self-draft doubles the compute on CPU)."""
+    sd = bench_doc["spec_decode"]
+    assert set(sd) == SPEC_KEYS
+    assert set(sd["engines"]) == SPEC_ENGINES
+    for name, e in sd["engines"].items():
+        assert set(e) == ENGINE_KEYS, name
+        for k in ENGINE_KEYS:
+            assert isinstance(e[k], (int, float)), (name, k)
+    k = sd["config"]["draft_k"]
+    assert sd["acceptance_rate"] == 1.0, "self-draft must accept all"
+    assert sd["accepted_per_dispatch"] == k + 1
+    assert sd["bit_exact"] == 1
+    # the §16 sync discipline: one packed readback per window — spec
+    # never syncs more per token than the fused spec-off engine (the win
+    # over fusion is accepted tokens per TARGET dispatch, not syncs)
+    assert (sd["engines"]["spec_on"]["host_syncs_per_token"]
+            <= sd["engines"]["spec_off"]["host_syncs_per_token"])
+    for key in ("arch", "n_requests", "max_gen", "draft_k", "self_draft"):
+        assert key in sd["config"], key
+    # sibling sections survived the merge
+    assert set(bench_doc["engines"]) == ENGINES
+    assert "swap" in bench_doc and "chaos" in bench_doc
 
 
 def test_bench_engine_sync_accounting(bench_doc):

@@ -20,7 +20,6 @@ import copy
 
 import pytest
 
-from repro.configs import get_config
 from repro.serving.engine import (EngineFull, PagedContinuousEngine,
                                   PoolExhausted, drive_paged)
 from repro.serving.faults import (FAULT_SEQ, FaultEvent, FaultInjector,
@@ -29,7 +28,9 @@ from repro.serving.paged_cache import BlockAllocator, MispredictionEWMA
 from repro.testing import given, settings, strategies as st
 from repro.workload.apps import make_dataset
 
-CFG = get_config("smollm-135m").reduced(num_layers=2, d_model=64)
+from conftest import tiny_engine_cfg
+
+CFG = tiny_engine_cfg()
 MAX_GEN = 10
 BT = 4
 
@@ -141,6 +142,41 @@ def test_poisoned_logits_quarantine_is_surgical():
     assert inj.poisoned == 1
     assert eng.quarantined == 1 and stats["quarantined"] == 1
     assert stats["served"] == n                 # the victim was re-served
+    _assert_contract(eng, stats, inj, n)
+
+
+def test_poisoned_draft_storm_keeps_verified_streams():
+    """§14 × §16: a poisoned DRAFT logits row under speculation ices the
+    slot's draft (cold draft), never the request — no target quarantine,
+    every stream matches the spec-off fault-free reference, and the
+    draft pool still drains."""
+    n = 4
+    inj = FaultInjector([
+        FaultEvent(window=2, kind="poison_draft_logits", slot=0),
+    ])
+    eng = _engine(faults=inj, n=n, spec_decode=True, draft_k=4,
+                  nan_guard=True)
+    stats = drive_paged(eng, copy.deepcopy(_reqs(n)))
+    assert inj.draft_poisoned == 1
+    assert eng.draft_quarantined == 1
+    assert eng.quarantined == 0, \
+        "a draft fault must never quarantine the verified target stream"
+    assert stats["served"] == n and not stats["shed"]
+    _assert_contract(eng, stats, inj, n)
+
+
+def test_poisoned_draft_is_noop_without_speculation():
+    """The same plan against a spec-off engine is a recorded no-op: the
+    injector guards on the draft band existing."""
+    n = 2
+    inj = FaultInjector([
+        FaultEvent(window=1, kind="poison_draft_logits"),
+    ])
+    eng = _engine(faults=inj, n=n, nan_guard=True)
+    stats = drive_paged(eng, copy.deepcopy(_reqs(n)))
+    assert ("poison_draft_logits" in [k for _, k in inj.fired]
+            and inj.draft_poisoned == 0)
+    assert stats["served"] == n and not stats["shed"]
     _assert_contract(eng, stats, inj, n)
 
 

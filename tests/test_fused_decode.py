@@ -32,7 +32,9 @@ from repro.serving.engine import (PagedContinuousEngine, _jitted,
                                   drive_paged)
 from repro.workload.apps import make_dataset
 
-CFG = get_config("smollm-135m").reduced()
+from conftest import tiny_cfg
+
+CFG = tiny_cfg()
 
 
 @pytest.fixture(scope="module")

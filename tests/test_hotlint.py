@@ -62,6 +62,7 @@ def test_counted_sync_sites_cover_engine_counters():
     assert sites == {("engine.py", "serve_batch"),
                      ("engine.py", "step"),
                      ("engine.py", "step_window"),
+                     ("engine.py", "_spec_window"),
                      ("engine.py", "_swap_out")}
 
 

@@ -10,12 +10,13 @@
 """
 import pytest
 
-from repro.configs import get_config
 from repro.serving.engine import (ContinuousEngine, EngineFull,
                                   PagedContinuousEngine, drive_paged)
 from repro.workload.apps import make_dataset
 
-CFG = get_config("smollm-135m").reduced()
+from conftest import tiny_cfg
+
+CFG = tiny_cfg()
 
 
 @pytest.fixture(scope="module")

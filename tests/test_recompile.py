@@ -68,6 +68,32 @@ def test_warmed_engine_serves_mixed_lengths_without_recompiles(params):
     assert eng._decode_multi._cache_size() == d0
 
 
+def test_warmed_spec_engine_serves_without_recompiles(params):
+    """§16: warmup also covers the draft-prefill wave grid, the one
+    draft-window shape, and the one verify-grid shape — a mixed-length
+    speculative serve (under-predictions included, so draft grows fire
+    too) triggers ZERO mid-serve XLA compiles."""
+    eng = PagedContinuousEngine(CFG, params=params, max_concurrency=4,
+                                num_blocks=64, block_tokens=8,
+                                max_len=64, max_gen=8, warmup=True,
+                                spec_decode=True, draft_k=4)
+    caches = (eng._prefill_wave, eng._draft_prefill_wave,
+              eng._draft_window, eng._verify_window)
+    sizes0 = [f._cache_size() for f in caches]
+    stats = drive_paged(eng, _mixed(6, seed=1, max_gen=8,
+                                    word_counts=(2, 9, 30)))
+    assert stats["served"] == 6
+    assert [f._cache_size() for f in caches] == sizes0
+    with count_compiles() as c:
+        stats = drive_paged(eng, _mixed(6, seed=4, max_gen=8,
+                                        word_counts=(4, 14, 55),
+                                        undershoot=True))
+    assert stats["served"] == 6
+    assert c["n"] == 0, \
+        f"{c['n']} XLA compiles during a warmed speculative serve"
+    assert [f._cache_size() for f in caches] == sizes0
+
+
 def test_warmup_is_idempotent_and_bounded(params):
     """Re-running warmup adds no cache entries, and the jit cache stays
     O(batch buckets × suffix buckets) + O(log max_gen)."""

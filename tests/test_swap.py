@@ -22,7 +22,6 @@ import pytest
 
 from repro.analysis.sanitizer import (SWAP_HOLDER, ShadowAllocator,
                                       SharedWriteError, SwappedBlockError)
-from repro.configs import get_config
 from repro.core.types import Request, ShedReason
 from repro.serving.engine import PagedContinuousEngine, drive_paged
 from repro.serving.faults import FaultEvent, FaultInjector
@@ -30,7 +29,9 @@ from repro.serving.paged_cache import BlockAllocator, HostSwapTier
 from repro.testing import given, settings, strategies as st
 from repro.workload.apps import make_shared_prefix_dataset
 
-CFG = get_config("smollm-135m").reduced(num_layers=2, d_model=64)
+from conftest import tiny_engine_cfg
+
+CFG = tiny_engine_cfg()
 MAX_GEN = 10
 BT = 4
 
@@ -160,6 +161,37 @@ def test_forced_swap_roundtrip_resumes_bitexact():
         assert eng.generated[r.req_id] == ref[r.req_id]
     eng.assert_drained()
     del pages_before
+
+
+def test_swap_mid_speculation_resumes_bitexact():
+    """§15 × §16: suspending a slot mid-speculation drops its draft KV
+    (never swapped — it is recomputable), and resume re-prefills the
+    DRAFT pool only: the target stream continues with zero re-prefilled
+    tokens and stays bit-exact with the spec-off reference."""
+    n = 2
+    eng = _engine(num_blocks=48, n=n, spec_decode=True, draft_k=4)
+    reqs = _reqs(n)
+    assert eng.join_many(copy.deepcopy(reqs)) == n
+    eng.step_window()                              # mid-speculation state
+    live = next(s for s, a in enumerate(eng.active) if a is not None)
+    assert eng._swap_out(live)
+    assert eng.num_suspended == 1
+    # the suspended slot's draft band is released at suspension time
+    assert eng.allocator.tables.get(eng._draft_seq(live), []) == []
+    stats = drive_paged(eng, [])
+    assert stats["swap_outs"] == 1 and stats["swap_ins"] == 1
+    assert stats["reprefilled_swapped_tokens"] == 0, \
+        "the TARGET stream must never re-prefill across a suspension"
+    assert stats["draft_reprefill_tokens"] > 0, \
+        "resume must rebuild the draft KV from the verified stream"
+    # a spec window emits up to draft_k+1 tokens, so the short request
+    # can finish inside the manual step_window above — count streams,
+    # not the drive's serve tally
+    assert len(eng.generated) == n and not stats["shed"]
+    ref = _reference_streams(n)
+    for r in reqs:
+        assert eng.generated[r.req_id] == ref[r.req_id]
+    eng.assert_drained()
 
 
 def test_swap_out_refuses_when_tier_full():
