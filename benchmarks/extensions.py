@@ -67,6 +67,15 @@
                     indicator pinning "speculation never changes greedy
                     output".  Writes a ``spec_decode`` section into
                     ``BENCH_engine.json`` (schema v7)
+- recovery_storm  : the §17 crash-safety contract as a benchmark: a
+                    scripted crash kills the engine mid-window; recovery
+                    from the last snapshot + write-ahead journal tail
+                    must finish every journaled request bit-exact vs the
+                    uncrashed reference with ZERO re-prefilled tokens
+                    for snapshot-covered requests, both tiers drained,
+                    and reports the measured ``restore_s``.  Writes a
+                    ``recovery`` section into ``BENCH_engine.json``
+                    (schema v8)
 """
 from __future__ import annotations
 
@@ -77,7 +86,7 @@ import numpy as np
 
 Row = Tuple[str, float, str]
 
-BENCH_ENGINE_SCHEMA_VERSION = 7
+BENCH_ENGINE_SCHEMA_VERSION = 8
 
 
 def sens_phi(rates=(12.0,), phis=(5e3, 5e4, 5e5, 5e12),
@@ -822,6 +831,128 @@ def chaos_storm(n_requests: int = 6, max_gen: int = 12, max_len: int = 64,
              f"retries_max={s['retries_max']} hung={s['hung']} "
              f"bitexact={s['bitexact_survivors']} "
              f"stranded={s['stranded_blocks']}")]
+
+
+def recovery_storm(n_requests: int = 6, max_gen: int = 12, max_len: int = 64,
+                   block_tokens: int = 8, crash_window: int = 3,
+                   snapshot_every: int = 1,
+                   out_path: str = "BENCH_engine.json",
+                   arch: str = "smollm-135m") -> List[Row]:
+    """Kill-and-recover storm (DESIGN.md §17): serve one workload twice
+    on the reduced config — fault-free reference, then with a
+    :class:`RecoveryManager` journaling admissions and snapshotting
+    every ``snapshot_every`` windows until a scripted ``crash`` fault
+    hard-stops the engine mid-window.  Recovery (last snapshot +
+    journal-tail replay into a FRESH engine) must then prove the
+    crash-safety contract as exact-int indicators:
+
+    - ``recovered_all = 1``: every journaled request finished after
+      recovery (nothing the crashed process admitted was lost);
+    - ``bitexact_recovered = 1``: every recovered stream equals the
+      uncrashed reference token-for-token;
+    - ``replayed_reprefill_tokens = 0``: snapshot-covered requests
+      resumed from their restored KV pages, never re-prefilled;
+    - ``drained = 1``: after replay both memory tiers are empty and the
+      allocator's books balance (``assert_drained``);
+
+    plus ``restore_s`` (wall time inside snapshot load + journal parse,
+    the §17 recovery-latency headline) and the journal self-check
+    counters (``journal_mismatches`` must stay 0)."""
+    import copy
+    import json
+    import os
+    import tempfile
+
+    from repro.configs import get_config
+    from repro.serving import snapshot as snaplib
+    from repro.serving.engine import PagedContinuousEngine, drive_paged
+    from repro.serving.faults import EngineCrash, FaultEvent, FaultInjector
+
+    cfg = get_config(arch).reduced(num_layers=2, d_model=64)
+    reqs = _engine_perf_requests(n_requests, max_gen)
+    # varied gen lengths: uniform ones collapse into one or two big
+    # fused windows, leaving no window boundary for a snapshot to land
+    # on before the scripted crash
+    for i, r in enumerate(reqs):
+        r.gen_length = 3 + (i * 3) % max_gen
+        r.predicted_gen_length = r.gen_length
+
+    def engine(faults=None):
+        return PagedContinuousEngine(
+            cfg, max_concurrency=n_requests,
+            num_blocks=4 * n_requests * (max_gen // block_tokens + 2),
+            block_tokens=block_tokens, max_len=max_len, max_gen=max_gen,
+            faults=faults)
+
+    ref_eng = engine()
+    ref_st = drive_paged(ref_eng, copy.deepcopy(reqs), max_steps=2_000)
+    if ref_st["served"] != n_requests:
+        raise RuntimeError(
+            f"recovery_storm: fault-free reference served "
+            f"{ref_st['served']}/{n_requests}")
+
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as ckpt:
+        inj = FaultInjector([FaultEvent(window=crash_window, kind="crash",
+                                        seam="window")])
+        eng = engine(inj)
+        mgr = snaplib.RecoveryManager(ckpt, snapshot_every=snapshot_every)
+        crashed = False
+        try:
+            drive_paged(eng, copy.deepcopy(reqs), max_steps=2_000,
+                        recovery=mgr)
+        except EngineCrash:
+            crashed = True
+        mgr.close()
+        if not crashed:
+            raise RuntimeError(
+                f"recovery_storm: scripted crash at window {crash_window} "
+                f"never fired — workload finished first")
+        eng2, report = snaplib.recover(engine, ckpt,
+                                       snapshot_every=snapshot_every)
+    wall = time.perf_counter() - t0
+    try:
+        eng2.assert_drained()
+        drained = 1
+    except Exception:
+        drained = 0
+    bitexact = int(all(eng2.generated.get(rid) == toks
+                       for rid, toks in ref_eng.generated.items()))
+    section = {
+        "storm": {
+            "journaled": int(report["journaled"]),
+            "recovered": int(report["recovered"]),
+            "recovered_all": int(report["recovered"] == n_requests),
+            "bitexact_recovered": bitexact,
+            "replayed_reprefill_tokens":
+                int(report["replayed_reprefill_tokens"]),
+            "journal_mismatches": int(report["journal_mismatches"]),
+            "torn_records": int(report["torn_records"]),
+            "snapshot_used": int(report["snapshot_used"] is not None),
+            "restore_s": float(report["restore_s"]),
+            "drained": drained,
+            "wall_s": wall},
+        "config": {"arch": arch, "reduced": True, "d_model": 64,
+                   "num_layers": 2, "n_requests": n_requests,
+                   "max_gen": max_gen, "max_len": max_len,
+                   "block_tokens": block_tokens,
+                   "crash_window": crash_window,
+                   "snapshot_every": snapshot_every}}
+    if out_path:
+        doc = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                doc = json.load(f)
+        doc["schema_version"] = BENCH_ENGINE_SCHEMA_VERSION
+        doc["recovery"] = section
+        with open(out_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+    s = section["storm"]
+    return [("recovery/storm", wall * 1e6,
+             f"journaled={s['journaled']} recovered={s['recovered']} "
+             f"bitexact={s['bitexact_recovered']} "
+             f"reprefill={s['replayed_reprefill_tokens']} "
+             f"restore_s={s['restore_s']:.3f} drained={s['drained']}")]
 
 
 def swap_storm(n_requests: int = 8, max_gen: int = 10,

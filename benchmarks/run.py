@@ -62,6 +62,12 @@ SUITES = {
     # v7) into BENCH_engine.json
     "spec": lambda fast: E.spec_decode_bench(
         max_gen=15 if fast else 30, repeats=2 if fast else 3),
+    # §17 crash-safety contract: kill mid-window, recover from the last
+    # snapshot + journal tail, prove bit-exact streams and zero
+    # re-prefill; merges the recovery section (schema v8) into
+    # BENCH_engine.json
+    "recovery": lambda fast: E.recovery_storm(
+        n_requests=4 if fast else 6, max_gen=8 if fast else 12),
 }
 
 

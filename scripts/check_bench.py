@@ -34,6 +34,11 @@ acceptance criteria of the PRs that shipped them:
   verify dispatch emits at least one token (self-draft pins
   accepted-per-dispatch at draft_k+1) and speculation never changes
   greedy output (``bit_exact`` vs the spec-off fused engine)
+- ISSUE 10: the crash-safety contract (DESIGN.md §17) — kill mid-window,
+  recover from the last snapshot + write-ahead journal tail: every
+  journaled request recovered, streams bit-exact vs the uncrashed
+  reference, ZERO re-prefilled tokens for snapshot-covered requests,
+  both tiers drained, and a non-negative measured ``restore_s``
 """
 from __future__ import annotations
 
@@ -76,9 +81,15 @@ FLOORS = [
     (("swap", "storm", "resume_cheaper"), 1, "exact"),
     (("spec_decode", "accepted_per_dispatch"), 1.0, "min"),
     (("spec_decode", "bit_exact"), 1, "exact"),
+    (("recovery", "storm", "recovered_all"), 1, "exact"),
+    (("recovery", "storm", "bitexact_recovered"), 1, "exact"),
+    (("recovery", "storm", "replayed_reprefill_tokens"), 0, "exact"),
+    (("recovery", "storm", "journal_mismatches"), 0, "exact"),
+    (("recovery", "storm", "drained"), 1, "exact"),
+    (("recovery", "storm", "restore_s"), 0.0, "min"),
 ]
 
-MIN_SCHEMA_VERSION = 7
+MIN_SCHEMA_VERSION = 8
 
 
 def _get(doc, path):

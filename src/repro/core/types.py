@@ -23,6 +23,8 @@ class ShedReason(str, enum.Enum):
     ADMISSION_STALLED = "admission_stalled"  # no progress for stall_limit
     OOM = "oom"                      # PoolExhausted culprit
     SWAPPED_TIMEOUT = "swapped_timeout"  # suspended to host, never resumed
+    JOURNAL_EXPIRED = "journal_expired"  # journaled, but TTL elapsed across
+    #                                      crash downtime before replay (§17)
 
 
 #: validated reason strings, in declaration order (``Shed.reason``)

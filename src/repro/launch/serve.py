@@ -66,7 +66,9 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
                              ttl_steps: int | None = None,
                              swap_blocks: int = 0,
                              spec_decode: bool = False,
-                             draft_k: int = 4) -> dict:
+                             draft_k: int = 4,
+                             checkpoint_dir: str | None = None,
+                             snapshot_every: int = 8) -> dict:
     """Continuous paged serving for real on CPU: MagnusService drives
     admission (prediction + block accounting) against the same
     BlockAllocator the engine stores KV pages in (DESIGN.md §8).  The
@@ -84,7 +86,13 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     destroying their KV; ``spec_decode`` turns on §16 speculative
     decoding (self-draft: the draft shares the target's weights, so
     streams stay bit-exact while every verify dispatch emits up to
-    ``draft_k + 1`` tokens)."""
+    ``draft_k + 1`` tokens); ``checkpoint_dir`` turns on §17 crash-safe
+    serving — every admission is journaled write-ahead, a full engine
+    snapshot lands every ``snapshot_every`` windows, and on start a
+    surviving journal from a previous process is recovered first
+    (outstanding requests finished bit-exact) before new traffic is
+    served."""
+    import os
     import time
 
     from repro.core.magnus import MagnusConfig, MagnusService
@@ -117,6 +125,39 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
     for r in wl:
         svc.on_request(r, r.arrival_time)   # prediction + Algorithm-1 acct
 
+    recovery = None
+    recovered = None
+    if checkpoint_dir is not None:
+        if spec_decode:
+            raise ValueError("--checkpoint-dir does not cover speculative "
+                             "engines (§16/§17): snapshot() refuses them")
+        from repro.serving import snapshot as snaplib
+
+        def _fresh_engine():
+            # same geometry as the serving engine, standalone allocator
+            # (the service's allocator belongs to THIS run)
+            return PagedContinuousEngine(
+                cfg, max_concurrency=max_concurrency, max_len=200,
+                max_gen=32,
+                allocator=BlockAllocator(num_blocks, block_tokens),
+                prefix_cache=prefix_cache, default_ttl=ttl_steps,
+                swap_blocks=swap_blocks)
+
+        wal = os.path.join(checkpoint_dir, snaplib.JOURNAL_NAME)
+        if os.path.exists(wal):
+            # restore-on-start: bring the previous process's journaled
+            # work to completion before serving new traffic
+            prev, report = snaplib.recover(_fresh_engine, checkpoint_dir,
+                                           snapshot_every=snapshot_every)
+            prev.assert_drained()
+            recovered = {k: report[k] for k in
+                         ("journaled", "outstanding", "recovered",
+                          "replayed_reprefill_tokens", "restore_s",
+                          "torn_records")}
+            os.remove(wal)   # recovered: this process's WAL starts fresh
+        recovery = snaplib.RecoveryManager(checkpoint_dir,
+                                           snapshot_every=snapshot_every)
+
     def refill(steps: int):
         # admission order comes from the service's scheduler (HRRN for
         # magnus-paged, FCFS for ccb-paged); requests then stream into
@@ -127,8 +168,11 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
 
     start = time.perf_counter()
     st = drive_paged(engine, [], max_steps=100_000, refill=refill,
-                     backlog=lambda: len(svc.batcher.queue) > 0)
+                     backlog=lambda: len(svc.batcher.queue) > 0,
+                     recovery=recovery)
     wall = time.perf_counter() - start
+    if recovery is not None:
+        recovery.close()
     util = st["util"]
     total_tokens = sum(len(g) for g in engine.generated.values())
     return {"requests": st["served"], "steps": st["steps"],
@@ -166,6 +210,13 @@ def run_paged_engine_backend(arch: str, rate: float, duration: float,
             "acceptance_rate": round(st["acceptance_rate"], 3),
             "draft_quarantined": st["draft_quarantined"],
             "draft_prefill_tokens": st["draft_prefill_tokens"],
+            # crash-safe serving (DESIGN.md §17)
+            "snapshots_taken": recovery.snapshots_taken
+            if recovery is not None else 0,
+            "journal_records": recovery.journal.records_written
+            if recovery is not None else 0,
+            "replayed_reprefill_tokens": st["replayed_reprefill_tokens"],
+            "recovered_on_start": recovered,
             "headroom": ewma.snapshot()}
 
 
@@ -206,6 +257,15 @@ def main() -> None:
     ap.add_argument("--draft-k", type=int, default=4,
                     help="speculative tokens proposed per window (the "
                          "verify dispatch covers draft-k + 1 positions)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="paged engine: crash-safe serving (DESIGN.md "
+                         "§17) — write-ahead admission journal + periodic "
+                         "full-engine snapshots in this directory; on "
+                         "start a surviving journal is recovered first "
+                         "(outstanding requests finished bit-exact)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="windows between full engine snapshots when "
+                         "--checkpoint-dir is set")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -219,7 +279,9 @@ def main() -> None:
                                            ttl_steps=args.ttl_steps,
                                            swap_blocks=args.swap_blocks,
                                            spec_decode=args.spec_decode,
-                                           draft_k=args.draft_k)
+                                           draft_k=args.draft_k,
+                                           checkpoint_dir=args.checkpoint_dir,
+                                           snapshot_every=args.snapshot_every)
         else:
             out = run_engine_backend(args.arch, args.rate, args.duration,
                                      args.strategy, args.seed)

@@ -563,6 +563,15 @@ class PagedContinuousEngine:
         self.reprefilled_swapped_tokens = 0
         self.swapped_ctx_tokens = 0    # context length at each suspension
         self.swap_in_s = 0.0           # wall time inside _swap_in
+        # -- crash-safe serving (DESIGN.md §17) --------------------------
+        # write-ahead admission journal hook (a RecoveryManager attaches
+        # its journal here; None = durability off, zero-cost)
+        self.journal = None
+        # req_ids whose progress a restored snapshot already covers: a
+        # re-prefill of one after restore is a recovery bug — counted
+        # exactly, like the §15 swap-debt probe
+        self._restored_ids: Set[int] = set()
+        self.replayed_reprefill_tokens = 0
         # -- speculative decoding (DESIGN.md §16) ------------------------
         # a draft model proposes draft_k tokens per window from its own
         # paged pool carved out of the SAME BlockAllocator (one physical
@@ -734,6 +743,11 @@ class PagedContinuousEngine:
         blocks are always still live when the insert retains them."""
         if self.prefix_cache is None or not self._publish_queue:
             return
+        if self.faults is not None:
+            # §17 crash seam: mid-publish — queued spans not yet in the
+            # tree (publishes are an optimization, not durable state:
+            # restore re-derives nothing from them)
+            self.faults.crash_due("publish", self.windows)
         queue, self._publish_queue = self._publish_queue, []
         for ids, table in queue:
             self.prefix_cache.insert(ids, table)
@@ -970,6 +984,11 @@ class PagedContinuousEngine:
                 # instead of _swap_in: the §15 never-re-prefill invariant
                 # is broken — count the wasted tokens exactly
                 self.reprefilled_swapped_tokens += len(sfx)
+            if p["req"].req_id in self._restored_ids:
+                # a snapshot-covered request re-entered through the
+                # prefill path: restore should have rebuilt its KV from
+                # the image (§17) — count the wasted tokens exactly
+                self.replayed_reprefill_tokens += len(sfx)
         # pad rows repeat row 0's slot/table/position (identical duplicate
         # scatter writes) and keep plens[0] for a valid attention gather
         plens[n:] = plens[0]
@@ -1132,6 +1151,10 @@ class PagedContinuousEngine:
             except EngineFull:
                 break
         if admitted:
+            if self.faults is not None:
+                # §17 crash seam: mid-wave — reservations made, prefill
+                # not yet dispatched (the WAL already holds the admits)
+                self.faults.crash_due("wave", self.windows)
             self._prefill_admitted(admitted)
         return len(admitted)
 
@@ -1170,6 +1193,9 @@ class PagedContinuousEngine:
         if len(a["generated"]) > self._observed_gen.get(req.req_id, 0):
             self._observed_gen[req.req_id] = len(a["generated"])
         self._requeued.add(req.req_id)
+        # destructive eviction: the readmission legitimately re-prefills
+        # (§17 snapshot-coverage tripwire must not fire on it)
+        self._restored_ids.discard(req.req_id)
         self._unpin_prefix(slot)
         self.allocator.free_seq(slot)     # shared prefix pages survive:
         self._release(slot)               # the cache still holds a reference
@@ -1232,6 +1258,10 @@ class PagedContinuousEngine:
         fresh = self.swap.fresh_blocks(table)
         if not self.swap.can_hold(len(fresh)):
             return False
+        if self.faults is not None:
+            # §17 crash seam: mid-swap — tier committed to, image not yet
+            # read back (nothing of the suspension survives the crash)
+            self.faults.crash_due("swap", self.windows)
         vals = None
         if fresh:
             pad = _pow2_ceil(len(fresh))
@@ -1264,6 +1294,9 @@ class PagedContinuousEngine:
         shadow = getattr(self.allocator, "_shadow", None)
         if shadow is not None:
             shadow.on_swap_out(req.req_id)
+        if self.journal is not None:
+            self.journal.append("swap", rid=int(req.req_id), dir="out",
+                                clock=int(self.clock))
         return True
 
     def _swap_out_victim(self, exclude: int) -> bool:
@@ -1340,6 +1373,9 @@ class PagedContinuousEngine:
         if shadow is not None:
             shadow.mark_materialized(slot)
             shadow.on_swap_in(rid)
+        if self.journal is not None:
+            self.journal.append("swap", rid=int(rid), dir="in",
+                                clock=int(self.clock))
         self.swap_in_s += time.perf_counter() - t0
 
     def _try_resume(self, rid: int) -> bool:
@@ -1650,6 +1686,10 @@ class PagedContinuousEngine:
         if stalled or not any(a is not None for a in self.active):
             self.window_stats = None
             return [], evicted, 0
+        if self.faults is not None:
+            # §17 crash seam: mid-window — prologue done (stalls burned,
+            # deadlines swept, guards run), decode not yet dispatched
+            self.faults.crash_due("window", self.windows)
         try:
             for slot, a in enumerate(self.active):
                 if a is None:
@@ -2074,13 +2114,61 @@ class PagedContinuousEngine:
         self._flush_publishes()
         _san.check_engine_drained(self)
 
+    # -- crash-safe snapshot / restore (DESIGN.md §17) -----------------------
+
+    @hot_path
+    def snapshot(self, path: str) -> str:
+        """Serialize the complete engine image to ``path`` (checksummed
+        npz, written atomically).  Exactly TWO counted readbacks: one
+        ``gather_pages`` over every live block of the pool (null block
+        excluded — its contents are junk by construction) and one logits
+        readback; everything else the snapshot stores is host state.
+        Must be taken at a window boundary — mid-wave state
+        (``_wave_pending``) and §16 speculative engines refuse."""
+        from repro.serving import snapshot as snaplib
+        if self.spec_decode:
+            raise snaplib.SnapshotError(
+                "snapshot/restore does not cover speculative engines (§16)")
+        self._flush_publishes()
+        if self._wave_pending:
+            raise snaplib.SnapshotError(
+                "snapshot inside an admission wave (wave_pending non-empty)")
+        used = sorted(b for b in self.allocator.refcount
+                      if b != self.null_block)
+        vals = None
+        if used:
+            pad = _pow2_ceil(len(used))
+            blk = np.full(pad, self.null_block, np.int32)
+            blk[:len(used)] = used
+            stacked = self._gather_pages(self.pages, blk)
+            # hotlint: sync(§17 snapshot page readback — ONE gather for the whole pool image)
+            vals = np.asarray(stacked)[:, :, :len(used)]
+            self.host_syncs += count_sync()
+        # hotlint: sync(§17 snapshot logits readback for bit-exact restore)
+        logits = np.asarray(self.logits)
+        self.host_syncs += count_sync()
+        return snaplib.save_engine(self, path, page_blocks=used,
+                                   page_values=vals, logits=logits)
+
+    def restore(self, path: str) -> None:
+        """Apply a snapshot to this freshly constructed engine: pages
+        scattered back through the jitted ``scatter_pages``, allocator
+        books overwritten wholesale (free-list order included), radix
+        tree and swap tier rebuilt, counters/EWMAs/clock restored, and
+        the §13 shadow REBUILT from the snapshot then cross-checked
+        against the restored books.  Not a hot path — restore happens
+        once, at process start."""
+        from repro.serving import snapshot as snaplib
+        snaplib.load_engine(self, path)
+
 
 def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
                 max_steps: int = 2_000,
                 refill=None, backlog=None,
                 queue_cap: Optional[int] = None,
                 max_retries: Optional[int] = None,
-                stall_limit: int = 64) -> Dict[str, object]:
+                stall_limit: int = 64,
+                recovery=None) -> Dict[str, object]:
     """The canonical paged serve loop: batched admission until the engine
     refuses, fused decode windows, evictions requeued at the queue front.
     One implementation shared by the benchmark, the launcher, and the
@@ -2107,7 +2195,12 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
     slot), not windows; ``util`` holds one sample per decode iteration
     (the in-window ramp is reconstructed from ``engine.window_stats``, so
     samples stay comparable across fuse settings and with the per-token
-    loop); ``host_syncs`` is the device→host readback count."""
+    loop); ``host_syncs`` is the device→host readback count.
+
+    ``recovery`` (optional) is a §17 ``RecoveryManager``: every request
+    is journaled write-ahead — BEFORE any engine work touches it — and
+    finish/shed records are fsync'd at each window boundary, with a
+    full snapshot every ``snapshot_every`` windows."""
     pending: Deque[Request] = deque(requests)
     served = steps = peak = evictions = no_progress = 0
     syncs0 = engine.host_syncs
@@ -2116,6 +2209,10 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
     def _shed(req: Request, reason: str) -> None:
         engine.shed_log.append(Shed(req, reason, engine.clock))
 
+    if recovery is not None:
+        recovery.attach(engine)
+        for r in pending:
+            recovery.on_admit(r, engine)
     if queue_cap is not None:
         while len(pending) > queue_cap:
             _shed(pending.pop(), "queue_full")
@@ -2136,6 +2233,9 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
             if not more:
                 break
             pending.extend(more)
+            if recovery is not None:
+                for r in more:
+                    recovery.on_admit(r, engine)
             if queue_cap is not None:
                 while len(pending) > queue_cap:
                     _shed(pending.pop(), "queue_full")
@@ -2154,6 +2254,8 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
             evictions += len(e.evicted)
             for r in reversed(e.evicted):
                 pending.appendleft(r)
+            if recovery is not None:
+                recovery.after_window(engine)
             steps += 1
             no_progress += 1
             continue
@@ -2165,6 +2267,9 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
                 _shed(r, "retry_budget")
             else:
                 pending.appendleft(r)
+        if recovery is not None:
+            # §17 window boundary: fsync the WAL tail, maybe snapshot
+            recovery.after_window(engine, finished)
         # reconstruct the per-iteration utilization ramp from the window's
         # post-grow snapshot: one fused window must not contribute a single
         # low-biased sample where k per-token steps contributed k ramping
@@ -2207,6 +2312,7 @@ def drive_paged(engine: PagedContinuousEngine, requests: List[Request], *,
             "swap_outs": engine.swap_outs,
             "swap_ins": engine.swap_ins,
             "reprefilled_swapped_tokens": engine.reprefilled_swapped_tokens,
+            "replayed_reprefill_tokens": engine.replayed_reprefill_tokens,
             # §16 speculative decoding (all zero with spec off)
             "spec_windows": engine.spec_windows,
             "spec_emitted": engine.spec_emitted,

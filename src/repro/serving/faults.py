@@ -47,6 +47,17 @@ Fault kinds (each a :class:`FaultEvent` on the plan):
     no longer fit must fall back to the destructive evict path, never
     corrupt a suspended image.  A second event with ``blocks<=0``
     restores the original capacity.
+``crash``
+    Hard-stop the engine by raising :class:`EngineCrash` at the named
+    ``seam`` (one of :data:`SEAMS`: ``"wave"`` — after a wave is
+    reserved but before its batched prefill, ``"window"`` — after the
+    window prologue but before the fused decode dispatch, ``"swap"`` —
+    before a victim's pages are read back to host, ``"publish"`` — with
+    radix publishes still queued) at the first time that seam is
+    reached with ``engine.windows >= window``.  The kill-and-recover
+    harness (DESIGN.md §17, tests/test_recovery.py) catches the raise,
+    discards the process state, and proves snapshot + journal replay
+    reconverges bit-exact.
 
 The injector is zero-cost when absent: the engine checks
 ``self.faults is not None`` exactly like the sanitizer checks
@@ -65,8 +76,8 @@ from typing import Dict, List, Optional, Tuple
 from repro.analysis.sanitizer import SharedWriteError
 from repro.core.types import SHED_REASONS, ShedReason
 
-__all__ = ["FAULT_SEQ", "KINDS", "SHED_REASONS", "ShedReason",
-           "FaultEvent", "Shed", "FaultInjector"]
+__all__ = ["FAULT_SEQ", "KINDS", "SEAMS", "SHED_REASONS", "ShedReason",
+           "EngineCrash", "FaultEvent", "Shed", "FaultInjector"]
 
 #: allocator seq_id owning fault-held (shrunk-pool) blocks; distinct from
 #: serving.paged_cache.NULL_SEQ (-1) so drain checks can tell a leaked
@@ -75,7 +86,25 @@ FAULT_SEQ = -2
 
 KINDS = ("pool_shrink", "pool_restore", "predict_skew", "poison_logits",
          "poison_draft_logits", "stall", "radix_corrupt", "swap_stall",
-         "host_pressure")
+         "host_pressure", "crash")
+
+#: engine seams a ``crash`` event can hard-stop at (DESIGN.md §17)
+SEAMS = ("wave", "window", "swap", "publish")
+
+
+class EngineCrash(RuntimeError):
+    """A scripted ``crash`` event fired: the engine process is dead.
+
+    Raised *through* the driver on purpose — nothing between the seam
+    and the harness may catch it, exactly like a SIGKILL.  Recovery is
+    a fresh engine restored from the last snapshot plus journal replay
+    (``repro.serving.snapshot.recover``)."""
+
+    def __init__(self, seam: str, window: int):
+        super().__init__(f"scripted crash at seam {seam!r} "
+                         f"(window {window})")
+        self.seam = seam
+        self.window = window
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,11 +120,15 @@ class FaultEvent:
     factor: float = 1.0              # predict_skew: multiplier on G'(p)
     slot: Optional[int] = None       # poison_logits: slot (None = first)
     ticks: int = 0                   # stall: clock ticks to burn
+    seam: Optional[str] = None       # crash: engine seam to die at
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r}; "
                              f"one of {KINDS}")
+        if self.kind == "crash" and self.seam not in SEAMS:
+            raise ValueError(f"crash needs seam in {SEAMS}, "
+                             f"got {self.seam!r}")
 
 
 @dataclasses.dataclass
@@ -128,6 +161,10 @@ class FaultInjector:
         self.plan = sorted(plan, key=lambda e: e.window)
         self.seed = seed
         self._idx = 0
+        # window-fired events; crash events fire at seams, not windows
+        self._events = [e for e in self.plan if e.kind != "crash"]
+        self._crash_plan = [e for e in self.plan if e.kind == "crash"]
+        self._crashed: set = set()   # indices into _crash_plan already fired
         self._skew_plan = [e for e in self.plan if e.kind == "predict_skew"]
         self._sidx = 0
         self._skew: Dict[Optional[str], float] = {}
@@ -143,6 +180,7 @@ class FaultInjector:
         self.swap_stalls = 0
         self._swap_stall_budget = 0
         self.host_pressure_events = 0
+        self.crashes = 0
 
     # -- admission seam ------------------------------------------------------
 
@@ -167,9 +205,9 @@ class FaultInjector:
         """Fire every event due at ``engine.windows``; returns stall
         ticks the engine must burn instead of decoding this window."""
         stall = 0
-        while (self._idx < len(self.plan)
-               and self.plan[self._idx].window <= engine.windows):
-            ev = self.plan[self._idx]
+        while (self._idx < len(self._events)
+               and self._events[self._idx].window <= engine.windows):
+            ev = self._events[self._idx]
             self._idx += 1
             self.fired.append((engine.windows, ev.kind))
             if ev.kind == "pool_shrink":
@@ -192,6 +230,21 @@ class FaultInjector:
             elif ev.kind == "host_pressure":
                 self._host_pressure(engine, ev.blocks)
         return stall
+
+    # -- crash seams (DESIGN.md §17) -----------------------------------------
+
+    def crash_due(self, seam: str, window: int) -> None:
+        """Raise :class:`EngineCrash` if a not-yet-fired ``crash`` event
+        targets ``seam`` with its window reached.  Each event fires at
+        most once, so the recovered engine (driven with a fresh injector
+        or none at all) replays past the seam."""
+        for i, ev in enumerate(self._crash_plan):
+            if i in self._crashed or ev.seam != seam or ev.window > window:
+                continue
+            self._crashed.add(i)
+            self.crashes += 1
+            self.fired.append((window, "crash"))
+            raise EngineCrash(seam=seam, window=window)
 
     # -- swap-tier seams -----------------------------------------------------
 
@@ -286,4 +339,5 @@ class FaultInjector:
                 "radix_corruptions_blocked": self.radix_corruptions_blocked,
                 "radix_probes_unchecked": self.radix_probes_unchecked,
                 "swap_stalls": self.swap_stalls,
-                "host_pressure_events": self.host_pressure_events}
+                "host_pressure_events": self.host_pressure_events,
+                "crashes": self.crashes}

@@ -147,6 +147,22 @@ class HostSyncCost:
         return (self.swap_transfer_time(blocks, block_tokens)
                 < self._base.prefill_time(1, max(prompt_len, 1)))
 
+    # -- crash recovery (DESIGN.md §17) --------------------------------------
+
+    def recovery_time(self, blocks: int, block_tokens: int,
+                      journal_records: int = 0,
+                      record_s: float = 10e-6) -> float:
+        """Price a §17 restore: scattering a ``blocks``-block pool image
+        back to the device costs exactly one host-link transfer (the
+        restore path is the swap-in path writ large — one jitted
+        scatter, nothing read back), plus a deterministic replay term
+        for parsing ``journal_records`` WAL records.  Replayed DECODE
+        work is deliberately excluded — it is serving, not recovery
+        overhead — and re-prefill is excluded because the snapshot
+        covers it (the ``replayed_reprefill_tokens == 0`` invariant)."""
+        return (self.swap_transfer_time(blocks, block_tokens)
+                + journal_records * record_s)
+
 
 def _estimator_bootstrap(cost: CostModel, memory: MemoryModel,
                          seed: int = 0) -> ServingTimeEstimator:

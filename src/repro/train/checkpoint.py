@@ -1,36 +1,76 @@
-"""Flat-npz checkpointing for arbitrary pytrees (params + opt state)."""
+"""Flat-npz checkpointing for arbitrary pytrees (params + opt state).
+
+``flatten_tree`` is the shared serialization helper: the trainer's
+``save`` and the serving engine's crash snapshot
+(``repro.serving.snapshot``, DESIGN.md §17) both flatten their state
+through it, so one keystr convention names every array on disk.
+"""
 from __future__ import annotations
 
-import json
 import os
-from typing import Any, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
 
 
-def _flatten(tree: Any) -> dict:
+class CheckpointMismatchError(ValueError):
+    """A restored array disagrees with the ``like`` template — missing
+    key, wrong shape, or wrong dtype.  Typed (and raised even under
+    ``python -O``, unlike the ``assert`` it replaced) so callers can
+    distinguish a stale checkpoint from a corrupted one."""
+
+
+def flatten_tree(tree: Any) -> Dict[str, np.ndarray]:
+    """Flatten a pytree to ``{keystr: np.ndarray}`` — the on-disk naming
+    convention shared by train checkpoints and engine snapshots."""
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return {jax.tree_util.keystr(path): np.asarray(leaf)
             for path, leaf in flat}
 
 
+# backwards-compatible private alias (pre-snapshot callers)
+_flatten = flatten_tree
+
+
 def save(path: str, tree: Any, step: int = 0) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    arrays = _flatten(tree)
+    arrays = flatten_tree(tree)
     np.savez(path, __step__=np.int64(step), **arrays)
 
 
 def restore(path: str, like: Any) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    """Restore into the structure of ``like``.
+
+    Every leaf is validated against the template: a key absent from the
+    file, a shape mismatch, or a dtype mismatch raises
+    :class:`CheckpointMismatchError` instead of silently round-tripping
+    a wrong array into the model.
+    """
     with np.load(path if path.endswith(".npz") else path + ".npz") as data:
         step = int(data["__step__"])
         flat = jax.tree_util.tree_flatten_with_path(like)
+        want = {jax.tree_util.keystr(p) for p, _ in flat[0]}
+        extra = sorted(k for k in data.files
+                       if k != "__step__" and k not in want)
+        if extra:
+            raise CheckpointMismatchError(
+                f"{path}: file holds arrays the template does not: {extra}")
         leaves = []
         for path_k, leaf in flat[0]:
             key = jax.tree_util.keystr(path_k)
+            if key not in data:
+                raise CheckpointMismatchError(
+                    f"{path}: missing array {key!r}")
             arr = data[key]
-            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            if arr.shape != tuple(leaf.shape):
+                raise CheckpointMismatchError(
+                    f"{path}: {key!r} has shape {arr.shape}, "
+                    f"template wants {tuple(leaf.shape)}")
+            if arr.dtype != np.dtype(leaf.dtype):
+                raise CheckpointMismatchError(
+                    f"{path}: {key!r} has dtype {arr.dtype}, "
+                    f"template wants {np.dtype(leaf.dtype)}")
             leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(like), leaves)

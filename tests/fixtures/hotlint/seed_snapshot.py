@@ -1,0 +1,20 @@
+"""Seeded violation: a snapshot-style pool readback with no suppression.
+
+Parsed by hotlint in tests — never imported.  Mirrors the §17
+``PagedContinuousEngine.snapshot`` shape: a hot function gathering the
+whole paged pool and copying it to host via ``np.asarray`` without a
+``# hotlint: sync(...)`` suppression, so HL001 must fire.  The real
+snapshot carries the suppression plus a ``count_sync()`` increment per
+readback (see test_counted_sync_sites_cover_engine_counters).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.sanitizer import hot_path
+
+
+@hot_path
+def snapshot_pool(pages, used):
+    blk = jnp.asarray(used)
+    vals = jnp.take(pages, blk, axis=2)
+    return np.asarray(vals)

@@ -13,7 +13,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 from benchmarks.extensions import (BENCH_ENGINE_SCHEMA_VERSION,  # noqa: E402
                                    chaos_storm, engine_perf,
                                    prefix_cache_sweep, radix_prefix_sweep,
-                                   spec_decode_bench, swap_storm)
+                                   recovery_storm, spec_decode_bench,
+                                   swap_storm)
 
 ENGINE_KEYS = {"decode_steps", "tokens", "wall_s", "steps_per_s",
                "tokens_per_s", "host_syncs", "host_syncs_per_token"}
@@ -42,6 +43,10 @@ SWAP_KEYS = {"completed", "shed", "evictions", "swap_outs", "swap_ins",
 SPEC_ENGINES = {"spec_off", "spec_on"}
 SPEC_KEYS = {"acceptance_rate", "accepted_per_dispatch", "bit_exact",
              "speedup_spec_vs_off", "engines", "config"}
+RECOVERY_KEYS = {"journaled", "recovered", "recovered_all",
+                 "bitexact_recovered", "replayed_reprefill_tokens",
+                 "journal_mismatches", "torn_records", "snapshot_used",
+                 "restore_s", "drained", "wall_s"}
 
 
 @pytest.fixture(scope="module")
@@ -59,6 +64,7 @@ def bench_doc(tmp_path_factory):
     # self-draft accepted_per_dispatch is exactly draft_k+1
     spec_decode_bench(n_requests=3, max_gen=10, repeats=1,
                       out_path=str(out))
+    recovery_storm(n_requests=4, max_gen=8, out_path=str(out))
     return json.loads(out.read_text())
 
 
@@ -228,6 +234,32 @@ def test_bench_spec_decode_section(bench_doc):
             <= sd["engines"]["spec_off"]["host_syncs_per_token"])
     for key in ("arch", "n_requests", "max_gen", "draft_k", "self_draft"):
         assert key in sd["config"], key
+
+
+def test_bench_recovery_section(bench_doc):
+    """Schema v8: the recovery section records the §17 crash-safety
+    contract as exact-int indicators — the values
+    scripts/check_bench.py floors pin.  ``restore_s`` is recorded but
+    only its sign is asserted (wall times are machine-dependent)."""
+    s = bench_doc["recovery"]["storm"]
+    assert set(s) == RECOVERY_KEYS
+    assert s["journaled"] == bench_doc["recovery"]["config"]["n_requests"]
+    assert s["recovered"] == s["journaled"]
+    assert s["recovered_all"] == 1
+    assert s["bitexact_recovered"] == 1
+    assert s["replayed_reprefill_tokens"] == 0
+    assert s["journal_mismatches"] == 0
+    assert s["snapshot_used"] == 1, \
+        "the storm must exercise the snapshot restore path, not just " \
+        "journal replay"
+    assert s["drained"] == 1
+    assert s["restore_s"] >= 0.0
+    for k in ("arch", "n_requests", "max_gen", "crash_window",
+              "snapshot_every"):
+        assert k in bench_doc["recovery"]["config"], k
+    # sibling sections survived the merge
+    assert set(bench_doc["engines"]) == ENGINES
+    assert "chaos" in bench_doc and "spec_decode" in bench_doc
     # sibling sections survived the merge
     assert set(bench_doc["engines"]) == ENGINES
     assert "swap" in bench_doc and "chaos" in bench_doc

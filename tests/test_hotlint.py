@@ -19,6 +19,7 @@ ROOT = Path(__file__).resolve().parent.parent
 FIXTURES = ROOT / "tests" / "fixtures" / "hotlint"
 SEEDS = [
     ("seed_sync.py", "HL001"),
+    ("seed_snapshot.py", "HL001"),
     ("seed_donation.py", "HL002"),
     ("seed_static.py", "HL003"),
     ("seed_pallas.py", "HL004"),
@@ -63,7 +64,8 @@ def test_counted_sync_sites_cover_engine_counters():
                      ("engine.py", "step"),
                      ("engine.py", "step_window"),
                      ("engine.py", "_spec_window"),
-                     ("engine.py", "_swap_out")}
+                     ("engine.py", "_swap_out"),
+                     ("engine.py", "snapshot")}
 
 
 def test_cli_exit_codes(tmp_path, monkeypatch):
